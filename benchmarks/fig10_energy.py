@@ -1,0 +1,35 @@
+"""Fig. 10(a): energy efficiency and operating frequency vs supply
+voltage; Fig. 10(b): energy/delay breakdown. All from the analytical
+macro model calibrated to the paper's anchors (DESIGN.md Sec. 2).
+"""
+
+from benchmarks.common import emit
+from repro.core import energy
+from repro.core.params import CIMConfig
+
+PAPER_POINTS = {0.6: 50.07, 0.9: 22.19, 1.2: 9.77}
+PAPER_FREQ = {0.6: 76.9, 1.2: 435.0}
+
+
+def main(quick: bool = False) -> None:
+    for vdd in (0.6, 0.7, 0.8, 0.9, 1.0, 1.1, 1.2):
+        rep = energy.macro_report(CIMConfig(vdd=vdd))
+        ref = PAPER_POINTS.get(vdd)
+        extra = f";paper={ref}" if ref else ""
+        emit(
+            f"fig10a_vdd{vdd:.1f}",
+            0.0,
+            f"tops_per_w={rep.tops_per_w:.2f};freq_mhz={rep.freq_mhz:.1f};"
+            f"cycle_ns={rep.cycle_ns:.2f}{extra}",
+        )
+    rep = energy.macro_report(CIMConfig(vdd=0.6))
+    emit(
+        "fig10b_breakdown",
+        0.0,
+        f"amu_energy_pct={rep.amu_frac*100:.1f} (paper 11.4);"
+        f"adc_delay_pct={rep.adc_delay_frac*100:.1f} (paper 31.8)",
+    )
+
+
+if __name__ == "__main__":
+    main()

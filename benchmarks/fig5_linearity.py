@@ -1,0 +1,37 @@
+"""Fig. 5(b): charge-sharing accumulation -- Monte-Carlo voltage curve
+vs the ideal equation, plus worst-case deviation in pMAC units.
+"""
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+from repro.core import noise
+from repro.core.params import PAPER_OP_16ROWS
+
+
+def main(quick: bool = False) -> None:
+    n = 1_000 if quick else 10_000
+    cfg = PAPER_OP_16ROWS.replace(vdd=0.9)
+    with Timer() as t:
+        res = noise.mc_accumulation_linearity(cfg, n_samples=n)
+    mean_v = np.asarray(res.mean_v)
+    ideal_v = np.asarray(res.ideal_v)
+    std_mv = np.asarray(res.std_v) * 1e3
+    dev_mv = np.abs(mean_v - ideal_v) * 1e3
+    # linearity: correlation of MC mean with the ideal line
+    r = np.corrcoef(mean_v, ideal_v)[0, 1]
+    emit(
+        "fig5b_accum_linearity",
+        t.us,
+        f"r={r:.6f};max_mean_dev_mV={dev_mv.max():.3f};"
+        f"max_std_mV={std_mv.max():.3f};n_mc={n}",
+    )
+    for pmac, mv, iv, sd in zip(
+        np.asarray(res.codes), mean_v, ideal_v, std_mv
+    ):
+        emit(f"fig5b_point_pmac{int(pmac):03d}", 0.0,
+             f"mc_V={mv:.5f};ideal_V={iv:.5f};std_mV={sd:.3f}")
+
+
+if __name__ == "__main__":
+    main()

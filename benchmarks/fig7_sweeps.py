@@ -1,0 +1,64 @@
+"""Fig. 7: hardware-aware system analysis.
+
+(a) accuracy vs cutoff, for 4/8/16 activated rows, with and without
+    hardware errors (paper: <=1% drop at cutoff 0.5 w/ errors).
+(b) accuracy vs ADC bit-resolution x activated rows at cutoff 0.5
+    (paper: with HW errors, more ADC bits stop helping -- 4-bit is the
+    operating point; more active rows degrade under noise).
+
+Synthetic-CIFAR caveat: absolute accuracies differ from CIFAR-10; the
+reproduced claims are the *orderings and deltas* (see DESIGN.md Sec. 7).
+"""
+
+from benchmarks.common import (
+    Timer, cim_policy, emit, evaluate, train_resnet_baseline,
+)
+from repro.configs.base import CIMPolicy
+
+
+def main(quick: bool = False) -> None:
+    params, bn, ds = train_resnet_baseline()
+    n_images = 64 if quick else 256
+
+    with Timer() as t:
+        fp_acc = evaluate(params, bn, ds, CIMPolicy(mode="fp"),
+                          n_images=n_images)
+    emit("fig7_fp_baseline", t.us, f"acc={fp_acc:.4f}")
+
+    cutoffs = (0.375, 0.5, 0.625) if quick else (0.25, 0.375, 0.5,
+                                                 0.625, 0.75)
+    rows_list = (8, 16) if quick else (4, 8, 16)
+
+    for noisy in (False, True):
+        tag = "hw" if noisy else "ideal"
+        for rows in rows_list:
+            for cutoff in cutoffs:
+                pol = cim_policy(rows=rows, cutoff=cutoff, noisy=noisy)
+                with Timer() as t:
+                    acc = evaluate(params, bn, ds, pol,
+                                   n_images=n_images)
+                emit(
+                    f"fig7a_{tag}_rows{rows}_cutoff{cutoff}",
+                    t.us,
+                    f"acc={acc:.4f};drop_vs_fp={fp_acc-acc:+.4f}",
+                )
+
+    adc_bits = (3, 4, 5) if quick else (2, 3, 4, 5, 6)
+    for noisy in (False, True):
+        tag = "hw" if noisy else "ideal"
+        for rows in rows_list:
+            for bits in adc_bits:
+                pol = cim_policy(rows=rows, cutoff=0.5, adc_bits=bits,
+                                 noisy=noisy)
+                with Timer() as t:
+                    acc = evaluate(params, bn, ds, pol,
+                                   n_images=n_images)
+                emit(
+                    f"fig7b_{tag}_rows{rows}_adc{bits}",
+                    t.us,
+                    f"acc={acc:.4f};drop_vs_fp={fp_acc-acc:+.4f}",
+                )
+
+
+if __name__ == "__main__":
+    main()

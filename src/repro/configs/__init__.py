@@ -1,0 +1,31 @@
+"""Arch registry: one module per assigned architecture (+ the paper's
+ResNet-20). Each exposes CONFIG (exact published dims; dry-run only)
+and SMOKE (reduced same-family config; runs real steps on CPU)."""
+
+from repro.configs.base import (
+    ARCH_IDS,
+    FULL_ATTENTION_ARCHS,
+    SHAPES,
+    CIMPolicy,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeConfig,
+    get_config,
+    shape_cells,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "FULL_ATTENTION_ARCHS",
+    "SHAPES",
+    "CIMPolicy",
+    "MambaConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "ShapeConfig",
+    "get_config",
+    "shape_cells",
+]

@@ -1,0 +1,25 @@
+"""ResNet-20 on CIFAR -- the paper's own evaluation network (Table I).
+
+CONFIG runs the paper operating point through the CIM macro model;
+SMOKE is a narrow fp-mode variant for CPU smoke tests.
+"""
+
+from repro.configs.base import CIMPolicy
+from repro.core.params import CIMConfig
+from repro.models.resnet import ResNetConfig
+
+CONFIG = ResNetConfig(
+    n_classes=10,
+    cim=CIMPolicy(
+        mode="cim",
+        cim=CIMConfig(rows_active=8, cutoff=0.5, adc_bits=4),
+        act_symmetric=True,
+        apply_to_logits=False,
+    ),
+)
+
+SMOKE = ResNetConfig(
+    n_classes=10,
+    widths=(8, 16, 16),
+    blocks_per_stage=1,
+)

@@ -1,0 +1,96 @@
+"""Core: the paper's P-8T SRAM CIM macro as a composable JAX feature.
+
+Public API:
+  CIMConfig            -- macro operating point (paper defaults)
+  cim_matmul           -- the macro as a matmul execution mode (fp/cim/...)
+  macro_op             -- faithful voltage-domain single-macro oracle
+  quantize_acts/weights, bitslice_weights -- datapath quantizers
+  adc_transfer_int, reference_voltages -- coarse-fine ADC model
+  macro_report         -- analytical energy/TOPS-per-W model
+"""
+
+from repro.core.adc import (
+    adc_dequant,
+    adc_flat_flash,
+    adc_read_voltage,
+    adc_transfer_int,
+    reference_voltages,
+)
+from repro.core.dac import (
+    abl_voltage_from_pmac,
+    accumulate_abl,
+    dac_voltage,
+    multiply_bitcell,
+    pmac_from_abl_voltage,
+)
+from repro.core.energy import (
+    MacroEnergyReport,
+    adc_energy_comparison,
+    energy_per_cycle_j,
+    frequency_mhz,
+    layer_energy_j,
+    macro_report,
+)
+from repro.core.macro import MacroOut, macro_op, macro_op_reference_digital
+from repro.core.matmul import (
+    CIMMode,
+    cim_matmul,
+    cim_matmul_exact_int,
+    cim_matmul_int,
+    cim_matmul_ste,
+)
+from repro.core.params import PAPER_OP_8ROWS, PAPER_OP_16ROWS, CIMConfig
+from repro.core.quant import (
+    QuantizedActs,
+    QuantizedWeights,
+    bitslice_weights,
+    dequantize_acts,
+    dequantize_weights,
+    fake_quant_acts,
+    fake_quant_weights,
+    plane_signs,
+    quantize_acts,
+    quantize_weights,
+    unslice_weights,
+)
+
+__all__ = [
+    "CIMConfig",
+    "CIMMode",
+    "MacroEnergyReport",
+    "MacroOut",
+    "PAPER_OP_16ROWS",
+    "PAPER_OP_8ROWS",
+    "QuantizedActs",
+    "QuantizedWeights",
+    "abl_voltage_from_pmac",
+    "accumulate_abl",
+    "adc_dequant",
+    "adc_energy_comparison",
+    "adc_flat_flash",
+    "adc_read_voltage",
+    "adc_transfer_int",
+    "bitslice_weights",
+    "cim_matmul",
+    "cim_matmul_exact_int",
+    "cim_matmul_int",
+    "cim_matmul_ste",
+    "dac_voltage",
+    "dequantize_acts",
+    "dequantize_weights",
+    "energy_per_cycle_j",
+    "fake_quant_acts",
+    "fake_quant_weights",
+    "frequency_mhz",
+    "layer_energy_j",
+    "macro_op",
+    "macro_op_reference_digital",
+    "macro_report",
+    "multiply_bitcell",
+    "plane_signs",
+    "pmac_from_abl_voltage",
+    "quantize_acts",
+    "quantize_weights",
+    "reference_voltages",
+    "unslice_weights",
+]

@@ -1,0 +1,150 @@
+"""The 4-bit coarse-fine flash ADC with in-SRAM reference generation.
+
+Paper Sec. III.B: 16 AMU_REF columns run the same charge-sharing pipeline
+as the compute columns. With the reference input pattern '1000' (code 8,
+half-VDD after DA conversion) and N of the 16 local arrays storing '1':
+
+  V_REF[N] = (N/2 + (16 - N)) * VDD / 16  <->  pMAC = 8N.
+
+Because references are produced by the same capacitor structure, they
+track kappa (C_ABL/C_CBL) and VDD drift -- the ADC decision depends only
+on charge ratios. Tests assert this invariance.
+
+Readout is 1-bit coarse (compare against REF[8]) + 3-bit fine flash
+(7 comparators on REF[1..7] or REF[9..15]), i.e. 8 comparators total vs
+15 for a plain 4-bit flash; Fig. 9(b) credits this plus the in-SRAM
+references with a 43.9% ADC energy saving (see energy.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dac
+from repro.core.params import CIMConfig
+
+
+def reference_input_code(cfg: CIMConfig) -> int:
+    """Reference DAC input whose value equals the ADC step in pMAC units.
+
+    The paper's 16-row operating point uses pattern '1000' (value 8),
+    giving references at pMAC = 8N -- exactly adc_step spacing
+    (threshold/2**adc_bits = 128/16 = 8). For other rows_active the stored
+    pattern is reprogrammed so spacing stays adc_step; non-integer steps
+    are disallowed by construction here.
+    """
+    step = cfg.adc_step
+    if abs(step - round(step)) > 1e-9:
+        raise ValueError(
+            f"adc_step={step} is not an integer pMAC spacing; choose "
+            "cutoff/adc_bits so threshold is a multiple of 2**adc_bits"
+        )
+    return int(round(step))
+
+
+def reference_voltages(cfg: CIMConfig) -> jax.Array:
+    """V_REF[N] for N = 0..(2**adc_bits - 1), via the AMU_REF pipeline.
+
+    Generated structurally: N local arrays store '1' (preserving the
+    reference DAC voltage), 16-N store '0' (CBL pulled to VDD), then ABL
+    charge sharing -- identical code path to the compute columns, so any
+    common-mode effect (kappa, VDD) cancels in the comparison.
+    """
+    code = reference_input_code(cfg)
+    n_codes = cfg.adc_codes
+    n_rows = cfg.rows_per_group
+    v_dac = dac.dac_voltage(jnp.asarray(code, dtype=jnp.int32), cfg)
+    # stored[N, j] = 1 for j < N  (N cells keep V_DAC, rest go to VDD)
+    rows = jnp.arange(n_rows)[None, :]
+    counts = jnp.arange(n_codes)[:, None]
+    stored = (rows < counts).astype(jnp.float32)  # [n_codes, 16]
+    v_cbl = dac.multiply_bitcell(
+        jnp.broadcast_to(v_dac, stored.shape), stored, cfg
+    )
+    return dac.accumulate_abl(v_cbl, cfg)  # [n_codes]
+
+
+def adc_read_voltage(
+    v_abl: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Coarse-fine comparator readout of an ABL voltage -> 4-bit code.
+
+    Comparator semantics: code = #{N >= 1 : V_ABL <= V_REF[N]}
+    (lower voltage = larger pMAC). Implemented as the coarse/fine
+    decomposition of Fig. 6(b); both produce identical codes, which the
+    tests assert against the flat 15-comparator flash.
+    """
+    vrefs = reference_voltages(cfg)  # [2**bits], decreasing in N
+    # Deterministic tie-break at exact reference crossings: a real
+    # comparator is metastable at equality; we resolve ties toward
+    # "above reference" with an epsilon << 1 LSB (LSB ~ adc_step/denom*VDD).
+    eps = cfg.vdd * 1e-6
+    if cfg.noisy and key is not None:
+        sigma_v = cfg.sigma_cmp_mv * 1e-3 * (cfg.vdd / 0.6)
+        # One effective input-referred offset per conversion; per-comparator
+        # offsets are sampled i.i.d. below in the comparison.
+        offs = sigma_v * jax.random.normal(
+            key, v_abl.shape + (vrefs.shape[0],)
+        )
+    else:
+        offs = jnp.zeros(v_abl.shape + (vrefs.shape[0],))
+
+    half = cfg.adc_codes // 2
+    cmp_all = v_abl[..., None] <= (vrefs + offs + eps)  # [..., 16]
+
+    # Coarse: MSB = V_ABL <= V_REF[half]  (pMAC >= 64)
+    msb = cmp_all[..., half]
+    # Fine: 7 comparators on the selected half.
+    lo_codes = jnp.sum(cmp_all[..., 1:half], axis=-1)
+    hi_codes = half + jnp.sum(cmp_all[..., half + 1 :], axis=-1)
+    code = jnp.where(msb, hi_codes, lo_codes).astype(jnp.int32)
+    return code
+
+
+def adc_flat_flash(v_abl: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """Conventional 15-comparator flash (noiseless), for equivalence tests."""
+    vrefs = reference_voltages(cfg)
+    eps = cfg.vdd * 1e-6
+    return jnp.sum(
+        v_abl[..., None] <= vrefs[1:] + eps, axis=-1
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Integer-domain ADC transfer (the behavioral model used at scale)
+# ---------------------------------------------------------------------------
+
+
+def adc_transfer_int(
+    pmac: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """pMAC -> ADC code in the integer domain.
+
+    code = clip(floor(pMAC / step), 0, 2**bits - 1)     ('floor')
+    Values above the cutoff threshold saturate to the top code -- the
+    paper's partial-sum quantization. With cfg.noisy, Gaussian noise with
+    sigma_pmac (converted from the voltage-domain sigmas) is added first,
+    which is exactly how the paper's "hardware considered system
+    simulations" inject PVT + comparator errors.
+    """
+    x = pmac.astype(jnp.float32)
+    if cfg.noisy and key is not None:
+        x = x + cfg.sigma_pmac * jax.random.normal(key, x.shape)
+    step = cfg.adc_step
+    if cfg.adc_mode == "nearest":
+        code = jnp.floor(x / step + 0.5)
+    else:
+        code = jnp.floor(x / step)
+    return jnp.clip(code, 0, cfg.adc_codes - 1).astype(jnp.int32)
+
+
+def adc_dequant(code: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """Digital reconstruction: pMAC_hat = code * step."""
+    return code.astype(jnp.float32) * cfg.adc_step

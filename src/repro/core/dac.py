@@ -1,0 +1,118 @@
+"""Voltage-domain model of the BL charge-sharing DAC (paper Sec. III.A).
+
+The AMU's 16 CBL capacitors are grouped binary-weighted:
+  8 caps <- X[3], 4 caps <- X[2], 2 caps <- X[1], 1 cap <- X[0],
+  1 cap always precharged.
+Input bit X[i] = 1 discharges its group to GND; charge sharing across all
+16 equal caps then yields
+
+  V_DAC = (sum_i 2**i * ~X[i] + 1) * VDD / 16 = (16 - X) / 16 * VDD.
+
+Value encoding used throughout: value(V) = 16 * (1 - V/VDD), so
+value(V_DAC) = X and V = VDD encodes 0.
+
+This module exists for faithfulness validation (tests + Monte-Carlo
+figures). The scaled behavioral path in matmul.py is proven equivalent
+when noise is disabled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CIMConfig
+
+
+def cap_states(x_code: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """Per-capacitor post-evaluation voltages, in units of VDD.
+
+    x_code: integer array of 4-bit codes, any shape [...].
+    Returns [..., 16] with entries in {0, 1}: cap j is discharged iff it
+    belongs to the group of a set input bit. Cap ordering follows Fig. 3a:
+    caps 0..7 <- X[3], 8..11 <- X[2], 12..13 <- X[1], 14 <- X[0],
+    cap 15 always precharged.
+    """
+    n = cfg.rows_per_group
+    bits = cfg.act_bits
+    # group id per cap: which input bit controls this capacitor (-1: none).
+    owner = []
+    for b in range(bits - 1, -1, -1):  # MSB first: sizes 8, 4, 2, 1
+        owner.extend([b] * (1 << b))
+    owner.extend([-1] * (n - len(owner)))  # always-precharged remainder
+    owner_arr = jnp.asarray(owner, dtype=jnp.int32)  # [16]
+
+    x = x_code.astype(jnp.int32)[..., None]  # [..., 1]
+    bit_set = jnp.where(
+        owner_arr >= 0,
+        jnp.bitwise_and(jnp.right_shift(x, jnp.maximum(owner_arr, 0)), 1),
+        0,
+    )  # [..., 16]; 1 -> discharged
+    return 1.0 - bit_set.astype(jnp.float32)  # voltage in VDD units
+
+
+def dac_voltage(
+    x_code: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Shared CBL/iBL voltage after the eDAC charge-sharing phase.
+
+    Equals (16 - X)/16 * VDD exactly in the noiseless case. With
+    cfg.noisy and a PRNG key, per-conversion Gaussian noise (paper Fig. 9a:
+    worst-case sigma 1.8 mV at 0.6 V) is added in the voltage domain.
+    """
+    states = cap_states(x_code, cfg)  # [..., 16] in VDD units
+    v = jnp.mean(states, axis=-1) * cfg.vdd
+    if cfg.noisy and key is not None:
+        sigma_v = cfg.sigma_dac_mv * 1e-3 * (cfg.vdd / 0.6)
+        v = v + sigma_v * jax.random.normal(key, v.shape)
+    return v
+
+
+def dac_value(v: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """Map a CBL voltage back to the value domain: 16 * (1 - V/VDD)."""
+    return cfg.rows_per_group * (1.0 - v / cfg.vdd)
+
+
+def multiply_bitcell(v_cbl: jax.Array, w_bit: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """P-8T multiplication phase (Fig. 3c / Fig. 4 truth table).
+
+    w=1: P0 off, CBL preserves V_DAC.  w=0: P0 on, CBL charged to VDD
+    (value 0). Voltage in, voltage out.
+    """
+    w = w_bit.astype(v_cbl.dtype)
+    return w * v_cbl + (1.0 - w) * cfg.vdd
+
+
+def accumulate_abl(
+    v_cbls: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """ABL charge-sharing accumulation over the group axis (last axis).
+
+    v_cbls: [..., rows_per_group] CBL voltages after multiplication.
+    Implements Fig. 5(b):
+      V_ABL = (sum_j C*V_j + C_ABL*VDD) / (16*C + C_ABL)
+    """
+    n = cfg.rows_per_group
+    kappa = cfg.c_abl_ratio
+    v = (jnp.sum(v_cbls, axis=-1) + kappa * cfg.vdd) / (n + kappa)
+    if cfg.noisy and key is not None:
+        # Comparator-side noise is applied at the ADC; here we model only
+        # residual ABL sampling noise folded into sigma_dac (per-CBL noise
+        # is already injected in dac_voltage when used end-to-end).
+        pass
+    return v
+
+
+def abl_voltage_from_pmac(pmac: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """Ideal equation of Fig. 5(b): V_ABL = VDD * (1 - pMAC/denom)."""
+    return cfg.vdd * (1.0 - pmac / cfg.share_denom)
+
+
+def pmac_from_abl_voltage(v_abl: jax.Array, cfg: CIMConfig) -> jax.Array:
+    return (1.0 - v_abl / cfg.vdd) * cfg.share_denom

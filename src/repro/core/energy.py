@@ -1,0 +1,168 @@
+"""Analytical energy/performance model of the P-8T CIM macro.
+
+TOPS/W cannot be measured on CPU/TPU, so this module reproduces the
+paper's published numbers analytically (DESIGN.md Sec. 2, "hardware
+assumptions changed"). Calibration anchors (all from the paper):
+
+  * Fig. 10(a): 50.07 TOPS/W @ 0.6 V, 22.19 @ 0.9 V, 9.77 @ 1.2 V
+                76.9 MHz @ 0.6 V -> 435 MHz @ 1.2 V  (4.4 ns @ 0.9 V)
+  * Fig. 10(b): AMU = 11.4% of total energy; ADC = 31.8% of total delay
+  * Fig. 9(b) : coarse-fine flash + in-SRAM refs save 43.9% ADC energy vs
+                a conventional R-ladder 4-bit flash
+  * 128 MACs (= 256 OPS) per macro cycle
+
+The per-cycle energy is fit as E(V) = E0 * (V / 0.6V)**alpha with alpha
+from least squares over the three published points; frequency as
+f(V) = kf * (V - Vt) fit to the two endpoints. Component split follows
+Fig. 10(b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.params import CIMConfig
+
+# Published anchors.
+_TOPS_PER_W = {0.6: 50.07, 0.9: 22.19, 1.2: 9.77}
+_FREQ_MHZ = {0.6: 76.9, 1.2: 435.0}
+_OPS_PER_CYCLE = 256  # 128 MACs x 2 ops
+_AMU_ENERGY_FRAC = 0.114
+_ADC_DELAY_FRAC = 0.318
+_CF_ADC_SAVING = 0.439  # vs conventional R-ladder 4-bit flash
+
+# Energy-unit decomposition for the Fig. 9(b) comparison: a conventional
+# 4-bit flash spends 15 comparator evaluations plus a resistor-ladder
+# reference (static burn, here 5 comparator-equivalents per conversion).
+# The proposed ADC spends 8 comparator evaluations (1 coarse + 7 fine)
+# plus in-SRAM reference generation, whose cost is solved from the
+# published 43.9% saving.
+_CONV_N_CMP = 15
+_CF_N_CMP = 8
+_LADDER_UNITS = 5.0
+
+
+def _fit_energy_quadratic() -> tuple[float, float, float]:
+    """Exact interpolation ln E = c0 + c1*u + c2*u^2, u = ln(V/0.6).
+
+    Three published anchors, three coefficients -> the model reproduces
+    the paper's 0.6/0.9/1.2 V TOPS/W numbers exactly (a pure power law
+    misses the 0.9 V point by ~9%: real macros deviate from E ~ V^alpha
+    as the ADC's share shifts across the voltage range).
+    """
+    pts = []
+    for v, topsw in _TOPS_PER_W.items():
+        e_cycle = _OPS_PER_CYCLE / (topsw * 1e12)  # J per macro cycle
+        pts.append((math.log(v / 0.6), math.log(e_cycle)))
+    (x0, y0), (x1, y1), (x2, y2) = pts
+    # Lagrange through 3 points -> monomial coefficients.
+    denom0 = (x0 - x1) * (x0 - x2)
+    denom1 = (x1 - x0) * (x1 - x2)
+    denom2 = (x2 - x0) * (x2 - x1)
+    c2 = y0 / denom0 + y1 / denom1 + y2 / denom2
+    c1 = (-y0 * (x1 + x2) / denom0 - y1 * (x0 + x2) / denom1
+          - y2 * (x0 + x1) / denom2)
+    c0 = (y0 * x1 * x2 / denom0 + y1 * x0 * x2 / denom1
+          + y2 * x0 * x1 / denom2)
+    return c0, c1, c2
+
+
+_C0, _C1, _C2 = _fit_energy_quadratic()
+
+
+def _fit_frequency() -> tuple[float, float]:
+    """f(V) = kf * (V - Vt), MHz; fit to the 0.6/1.2 V endpoints."""
+    f1, f2 = _FREQ_MHZ[0.6], _FREQ_MHZ[1.2]
+    v1, v2 = 0.6, 1.2
+    vt = (f2 * v1 - f1 * v2) / (f2 - f1)
+    kf = f2 / (v2 - vt)
+    return kf, vt
+
+
+_KF, _VT = _fit_frequency()
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroEnergyReport:
+    vdd: float
+    freq_mhz: float
+    cycle_ns: float
+    energy_per_cycle_pj: float
+    tops_per_w: float
+    # component breakdown (fractions of total energy)
+    amu_frac: float
+    adc_frac: float
+    digital_frac: float
+    # ADC-only comparison (Fig. 9b), normalized to the conventional flash
+    adc_conventional_units: float
+    adc_proposed_units: float
+    adc_saving_frac: float
+    # delay breakdown
+    adc_delay_frac: float
+
+
+def energy_per_cycle_j(vdd: float) -> float:
+    u = math.log(vdd / 0.6)
+    return math.exp(_C0 + _C1 * u + _C2 * u * u)
+
+
+def frequency_mhz(vdd: float) -> float:
+    if vdd <= _VT:
+        raise ValueError(f"vdd={vdd} at or below fitted Vt={_VT:.3f}")
+    return _KF * (vdd - _VT)
+
+
+def adc_energy_comparison() -> tuple[float, float, float]:
+    """(conventional_units, proposed_units, saving) per Fig. 9(b).
+
+    conventional = 15 cmp + ladder; proposed = 8 cmp + in-SRAM refs with
+    the reference cost solved from the published 43.9% saving.
+    """
+    conv = _CONV_N_CMP + _LADDER_UNITS
+    prop = conv * (1.0 - _CF_ADC_SAVING)
+    ref_sram_units = prop - _CF_N_CMP
+    if ref_sram_units < 0:
+        raise RuntimeError("calibration produced negative reference energy")
+    return conv, prop, _CF_ADC_SAVING
+
+
+def macro_report(cfg: CIMConfig) -> MacroEnergyReport:
+    e_cyc = energy_per_cycle_j(cfg.vdd)
+    f = frequency_mhz(cfg.vdd)
+    ops = 2.0 * cfg.macs_per_cycle
+    topsw = ops / e_cyc / 1e12
+    conv, prop, saving = adc_energy_comparison()
+    # Fig. 10(b): AMU 11.4%; remaining split between ADC and digital with
+    # the ADC share consistent with its delay dominance at low VDD.
+    adc_frac = (1.0 - _AMU_ENERGY_FRAC) * 0.55
+    digital_frac = 1.0 - _AMU_ENERGY_FRAC - adc_frac
+    return MacroEnergyReport(
+        vdd=cfg.vdd,
+        freq_mhz=f,
+        cycle_ns=1e3 / f,
+        energy_per_cycle_pj=e_cyc * 1e12,
+        tops_per_w=topsw,
+        amu_frac=_AMU_ENERGY_FRAC,
+        adc_frac=adc_frac,
+        digital_frac=digital_frac,
+        adc_conventional_units=conv,
+        adc_proposed_units=prop,
+        adc_saving_frac=saving,
+        adc_delay_frac=_ADC_DELAY_FRAC,
+    )
+
+
+def layer_energy_j(
+    cfg: CIMConfig, m: int, k: int, n: int
+) -> tuple[float, int]:
+    """Energy and macro-cycles to run an [M,K]x[K,N] matmul on macros.
+
+    Each macro cycle covers rows_active reduction rows x n_outputs
+    output channels for one input row (the paper maps 16 input channels
+    x 8 outputs per cycle).
+    """
+    groups = -(-k // cfg.rows_active)
+    col_tiles = -(-n // cfg.n_outputs)
+    cycles = m * groups * col_tiles
+    return cycles * energy_per_cycle_j(cfg.vdd), cycles

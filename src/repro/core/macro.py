@@ -1,0 +1,118 @@
+"""Faithful voltage-domain model of one 256x80 P-8T SRAM CIM macro op.
+
+One macro cycle (paper Fig. 4 / Fig. 5):
+  Pch.    -> all CBL/iBL precharged to VDD
+  DA conv -> 16 local arrays convert 16 4-bit inputs via BL charge sharing
+  Mult.   -> P-8T cells multiply by the stored 1-bit weights
+  Acc.    -> eACC shares the 16 CBLs of each column onto its ABL
+  ADC     -> 4-bit coarse-fine flash against AMU_REF references
+  Shift-add (digital) -> recombine 8 bit-planes into 8 outputs
+
+This module is the ground-truth oracle for the behavioral/integer model
+in matmul.py and the Pallas kernel; it is deliberately unoptimized.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc, dac, quant
+from repro.core.params import CIMConfig
+
+
+class MacroOut(NamedTuple):
+    outputs: jax.Array  # [n_outputs] int32 shift-add results
+    adc_codes: jax.Array  # [n_outputs, weight_bits] int32
+    v_abl: jax.Array  # [n_outputs, weight_bits] f32 column ABL voltages
+    pmac_ideal: jax.Array  # [n_outputs, weight_bits] int32 noiseless pMAC
+
+
+def macro_op(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> MacroOut:
+    """Run one macro cycle in the voltage domain.
+
+    Args:
+      x_codes: [rows_per_group] int 4-bit input codes (inactive rows are
+        masked to 0 beyond rows_active).
+      w_codes: [rows_per_group, n_outputs] signed int weight codes
+        (weight_bits wide); bit-sliced internally across columns exactly
+        as the 64 weight columns of the macro.
+      cfg: operating point.
+      key: PRNG key enabling hardware-error injection when cfg.noisy.
+
+    Returns MacroOut with digital outputs = sum_b sign_b 2^b dequant(code_b)
+    summed in the digital shift-adder.
+    """
+    n = cfg.rows_per_group
+    if x_codes.shape != (n,):
+        raise ValueError(f"x_codes must be [{n}], got {x_codes.shape}")
+    n_out = w_codes.shape[-1]
+
+    # Mask inactive rows (their local arrays are not activated -> their
+    # CBLs stay at VDD = value 0, equivalent to x=0).
+    active = jnp.arange(n) < cfg.rows_active
+    x_act = jnp.where(active, x_codes.astype(jnp.int32), 0)
+
+    if cfg.noisy and key is not None:
+        k_dac, k_adc = jax.random.split(key)
+        dac_keys = jax.random.split(k_dac, n)
+        v_rows = jnp.stack(
+            [
+                dac.dac_voltage(x_act[j], cfg, key=dac_keys[j])
+                for j in range(n)
+            ]
+        )  # [16]
+    else:
+        k_adc = None
+        v_rows = dac.dac_voltage(x_act, cfg)  # [16]
+
+    planes = quant.bitslice_weights(w_codes, cfg.weight_bits)
+    # planes: [B, 16, n_out] -> arrange as columns [16, n_out, B]
+    w_cols = jnp.moveaxis(planes, 0, -1).astype(jnp.float32)
+
+    # Multiplication phase per column: broadcast row voltages.
+    v_cbl = dac.multiply_bitcell(v_rows[:, None, None], w_cols, cfg)
+    # Accumulation: share the 16 CBLs of each column onto its ABL.
+    v_abl = dac.accumulate_abl(jnp.moveaxis(v_cbl, 0, -1), cfg)  # [n_out, B]
+
+    code = adc.adc_read_voltage(v_abl, cfg, key=k_adc)  # [n_out, B]
+    pmac_hat = adc.adc_dequant(code, cfg)
+
+    signs = quant.plane_signs(cfg.weight_bits).astype(jnp.float32)
+    outputs = jnp.sum(pmac_hat * signs[None, :], axis=-1)
+
+    pmac_ideal = jnp.einsum(
+        "r,rob->ob", x_act.astype(jnp.int32), planes.transpose(1, 2, 0)
+    ).astype(jnp.int32)
+    return MacroOut(
+        outputs=outputs.astype(jnp.float32),
+        adc_codes=code,
+        v_abl=v_abl,
+        pmac_ideal=pmac_ideal,
+    )
+
+
+def macro_op_reference_digital(
+    x_codes: jax.Array, w_codes: jax.Array, cfg: CIMConfig
+) -> jax.Array:
+    """Noiseless digital equivalent with the same ADC transfer.
+
+    Used by tests: voltage-domain macro_op must match this exactly when
+    noise is off, for every input/weight pattern.
+    """
+    active = jnp.arange(cfg.rows_per_group) < cfg.rows_active
+    x_act = jnp.where(active, x_codes.astype(jnp.int32), 0)
+    planes = quant.bitslice_weights(w_codes, cfg.weight_bits)  # [B,16,O]
+    pmac = jnp.einsum("r,bro->bo", x_act, planes)  # [B, O]
+    code = adc.adc_transfer_int(pmac, cfg)
+    pmac_hat = adc.adc_dequant(code, cfg)
+    signs = quant.plane_signs(cfg.weight_bits).astype(jnp.float32)
+    return jnp.sum(pmac_hat * signs[:, None], axis=0)

@@ -1,0 +1,211 @@
+"""cim_matmul: the paper's macro as a scalable matmul execution mode.
+
+Semantics (per output element, reduction dim K tiled into groups of
+``rows_active`` rows — each group is one ABL accumulation on one macro):
+
+    out[m, n] = s_x * s_w[n] * ( sum_g sum_b sign_b * 2^0..  (shift-add)
+                   ADC( sum_{k in g} Xq[m,k] * Wbit_b[k,n] )  - z_x * sum_k W[k,n] )
+
+where ADC is the cutoff-clipped coarse-fine transfer of adc.py (floor,
+step = threshold / 2**adc_bits) with optional Gaussian hardware error.
+
+Modes:
+  'fp'         : plain floating-point matmul (framework baseline).
+  'cim-exact'  : integer-exact quantized matmul (paper w/o ADC + noise).
+  'cim'        : full behavioral model (paper-faithful; used for Table I).
+  'cim-kernel' : same semantics via the Pallas GPQ kernel (repro.kernels).
+
+The voltage-domain oracle for 'cim' is macro.macro_op; equivalence is
+asserted in tests/test_core_cim.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_lib
+from repro.core import quant
+from repro.core.params import CIMConfig
+
+CIMMode = Literal["fp", "cim-exact", "cim", "cim-kernel"]
+
+
+def _pad_k_to_groups(k: int, rows: int) -> int:
+    return (k + rows - 1) // rows * rows
+
+
+def cim_matmul_int(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Grouped-partial-sum quantized (GPQ) matmul in integer units.
+
+    Args:
+      x_codes: [M, K] int32 unsigned activation codes in [0, 2^act_bits).
+      w_codes: [K, N] int32 signed weight codes (weight_bits wide).
+      cfg: macro operating point (rows_active = group size).
+      key: PRNG key for hardware-error injection when cfg.noisy.
+
+    Returns [M, N] float32: sum over groups/bit-planes of the dequantized
+    ADC codes with shift-add weighting. Equals (x_codes @ w_codes) exactly
+    when the ADC is bypass-exact (full resolution, no clip, no noise).
+    """
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, (x_codes.shape, w_codes.shape)
+    rows = cfg.rows_active
+    b = cfg.weight_bits
+    k_pad = _pad_k_to_groups(k, rows)
+    g = k_pad // rows
+
+    x_p = jnp.pad(x_codes.astype(jnp.int32), ((0, 0), (0, k_pad - k)))
+    w_p = jnp.pad(w_codes.astype(jnp.int32), ((0, k_pad - k), (0, 0)))
+
+    # [G, rows, N] and [G, M, rows] group views.
+    w_g = w_p.reshape(g, rows, n)
+    x_g = x_p.reshape(m, g, rows).transpose(1, 0, 2)
+
+    signs = quant.plane_signs(b).astype(jnp.float32)  # [B]
+    use_noise = cfg.noisy and key is not None
+    base_key = key if use_noise else jax.random.PRNGKey(0)
+
+    def body(acc, inputs):
+        gi, xg, wg = inputs
+        planes = quant.bitslice_weights(wg, b)  # [B, rows, N]
+        # One MXU-shaped contraction per group: [M, rows] x [rows, B*N].
+        flat = planes.transpose(1, 0, 2).reshape(rows, b * n)
+        pmac = jax.lax.dot(
+            xg, flat, preferred_element_type=jnp.int32
+        ).reshape(m, b, n)
+        if use_noise:
+            gkey = jax.random.fold_in(base_key, gi)
+        else:
+            gkey = None
+        code = adc_lib.adc_transfer_int(pmac, cfg, key=gkey)
+        pmac_hat = adc_lib.adc_dequant(code, cfg)  # [M, B, N] f32
+        contrib = jnp.einsum("mbn,b->mn", pmac_hat, signs)
+        return acc + contrib, None
+
+    acc0 = jnp.zeros((m, n), dtype=jnp.float32)
+    gids = jnp.arange(g, dtype=jnp.uint32)
+    acc, _ = jax.lax.scan(body, acc0, (gids, x_g, w_g))
+    return acc
+
+
+def cim_matmul_exact_int(x_codes: jax.Array, w_codes: jax.Array) -> jax.Array:
+    """Integer-exact path: one int32 matmul (paper w/o ADC effects)."""
+    return jax.lax.dot(
+        x_codes.astype(jnp.int32),
+        w_codes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+
+
+def _cim_forward(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CIMConfig,
+    mode: CIMMode,
+    key: jax.Array | None,
+    act_symmetric: bool,
+    act_clip_pct: float = 1.0,
+) -> jax.Array:
+    """Quantize -> macro matmul -> digital dequant + zero-point fix."""
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    x2 = x.reshape(-1, k)
+
+    qa = quant.quantize_acts(x2, cfg.act_bits, symmetric=act_symmetric,
+                             clip_pct=act_clip_pct)
+    qw = quant.quantize_weights(w, cfg.weight_bits)
+
+    if mode == "cim-exact":
+        y_int = cim_matmul_exact_int(qa.codes, qw.codes)
+    elif mode == "cim":
+        y_int = cim_matmul_int(qa.codes, qw.codes, cfg, key=key)
+    elif mode == "cim-kernel":
+        from repro.kernels import ops as kernel_ops  # local import: optional dep
+
+        y_int = kernel_ops.cim_matmul_kernel(qa.codes, qw.codes, cfg)
+    else:  # pragma: no cover - guarded by dispatcher
+        raise ValueError(mode)
+
+    # Digital zero-point correction: z * sum_k W[k, n]  (exact column sums
+    # are free digitally; the macro only ever saw unsigned codes).
+    colsum = jnp.sum(qw.codes, axis=0, keepdims=True).astype(jnp.float32)
+    y = (y_int - qa.zero_point.astype(jnp.float32) * colsum)
+    y = y * qa.scale * qw.scale
+    return y.reshape(*orig_shape[:-1], w.shape[-1]).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 5, 6))
+def cim_matmul_ste(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CIMConfig,
+    mode: CIMMode,
+    key: jax.Array | None = None,
+    act_symmetric: bool = False,
+    act_clip_pct: float = 1.0,
+) -> jax.Array:
+    """CIM matmul with straight-through gradients (QAT).
+
+    Forward runs the full macro model; backward treats the transfer as
+    the underlying linear map (d/dx = w^T, d/dw = x^T), the standard STE
+    the paper's own QAT-style system simulation implies.
+    """
+    return _cim_forward(x, w, cfg, mode, key, act_symmetric,
+                        act_clip_pct)
+
+
+def _ste_fwd(x, w, cfg, mode, key, act_symmetric, act_clip_pct):
+    return (
+        _cim_forward(x, w, cfg, mode, key, act_symmetric, act_clip_pct),
+        (x, w),
+    )
+
+
+def _ste_bwd(cfg, mode, act_symmetric, act_clip_pct, res, g):
+    x, w = res
+    k = x.shape[-1]
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, k)
+    dx = (g2 @ w.T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw, None
+
+
+cim_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def cim_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CIMConfig | None = None,
+    *,
+    mode: CIMMode = "fp",
+    key: jax.Array | None = None,
+    act_symmetric: bool = False,
+    act_clip_pct: float = 1.0,
+    ste: bool = True,
+) -> jax.Array:
+    """Dispatching entry point used by model layers.
+
+    mode='fp' is a plain matmul; other modes run the macro model with
+    (optionally) STE gradients so models can train through the hardware.
+    """
+    if mode == "fp":
+        return x @ w
+    assert cfg is not None, "CIM modes require a CIMConfig"
+    if ste:
+        return cim_matmul_ste(x, w, cfg, mode, key, act_symmetric,
+                              act_clip_pct)
+    return _cim_forward(x, w, cfg, mode, key, act_symmetric,
+                        act_clip_pct)

@@ -1,0 +1,96 @@
+"""Monte-Carlo hardware-error utilities (paper Figs. 5b, 9a and Sec. IV).
+
+The paper characterizes analog non-idealities with 10K-sample Monte-Carlo
+circuit simulations and then injects them into PyTorch system simulations.
+We mirror that methodology: voltage-domain sigmas (DAC charge-sharing
+variation, comparator offset) are sampled here and folded into the pMAC
+domain for the behavioral model (CIMConfig.sigma_pmac).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc, dac
+from repro.core.params import CIMConfig
+
+
+class MCResult(NamedTuple):
+    codes: jax.Array  # swept DAC codes [L]
+    mean_v: jax.Array  # mean voltage per code [L]
+    std_v: jax.Array  # std-dev per code [L]
+    ideal_v: jax.Array  # ideal equation voltage [L]
+
+
+def mc_dac_linearity(
+    cfg: CIMConfig, *, n_samples: int = 10_000, seed: int = 0
+) -> MCResult:
+    """Fig. 9(a): Monte-Carlo DAC transfer across all 16 input codes."""
+    noisy_cfg = cfg.replace(noisy=True)
+    codes = jnp.arange(noisy_cfg.act_levels, dtype=jnp.int32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_samples)
+
+    def one(key):
+        return dac.dac_voltage(codes, noisy_cfg, key=key)
+
+    vs = jax.vmap(one)(keys)  # [S, L]
+    ideal = (
+        noisy_cfg.vdd
+        * (noisy_cfg.act_levels - codes.astype(jnp.float32))
+        / noisy_cfg.act_levels
+    )
+    return MCResult(codes, jnp.mean(vs, 0), jnp.std(vs, 0), ideal)
+
+
+def mc_accumulation_linearity(
+    cfg: CIMConfig, *, n_samples: int = 10_000, seed: int = 0
+) -> MCResult:
+    """Fig. 5(b): V_ABL Monte-Carlo vs the ideal equation over pMAC.
+
+    Sweeps pMAC by driving all active rows with the same input code and
+    weight '1' so pMAC = rows_active * code; each sample perturbs the
+    per-CBL DAC voltages independently.
+    """
+    noisy_cfg = cfg.replace(noisy=True)
+    codes = jnp.arange(noisy_cfg.act_levels, dtype=jnp.int32)
+    pmac = codes * noisy_cfg.rows_active
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_samples)
+    n = noisy_cfg.rows_per_group
+
+    def one(key):
+        ks = jax.random.split(key, n)
+        # Per-row DAC conversions (independent noise per CBL).
+        v_rows = jnp.stack(
+            [dac.dac_voltage(codes, noisy_cfg, key=ks[j]) for j in range(n)],
+            axis=-1,
+        )  # [L, 16]
+        active = jnp.arange(n) < noisy_cfg.rows_active
+        w = jnp.broadcast_to(active.astype(jnp.float32), v_rows.shape)
+        v_cbl = dac.multiply_bitcell(v_rows, w, noisy_cfg)
+        return dac.accumulate_abl(v_cbl, noisy_cfg)  # [L]
+
+    vs = jax.vmap(one)(keys)
+    ideal = dac.abl_voltage_from_pmac(pmac.astype(jnp.float32), noisy_cfg)
+    return MCResult(pmac, jnp.mean(vs, 0), jnp.std(vs, 0), ideal)
+
+
+def mc_adc_error_rate(
+    cfg: CIMConfig, *, n_samples: int = 4_096, seed: int = 0
+) -> jax.Array:
+    """Probability of an ADC code error per pMAC level under HW noise.
+
+    Returns [pmac_levels] array of P(code != ideal_code).
+    """
+    noisy_cfg = cfg.replace(noisy=True)
+    pmac = jnp.arange(noisy_cfg.pmac_levels, dtype=jnp.float32)
+    ideal_code = adc.adc_transfer_int(pmac, cfg.replace(noisy=False))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_samples)
+
+    def one(key):
+        code = adc.adc_transfer_int(pmac, noisy_cfg, key=key)
+        return (code != ideal_code).astype(jnp.float32)
+
+    return jnp.mean(jax.vmap(one)(keys), axis=0)

@@ -1,0 +1,181 @@
+"""Configuration for the P-8T SRAM CIM macro model.
+
+All geometry and operating-point numbers default to the paper's
+implementation: a 256x80 macro built from 16x5 AMUs, 16 local arrays per
+accumulation bit-line (ABL), 4-bit activations, 8-bit bit-sliced weights,
+4-bit coarse-fine flash ADC, cutoff 0.5, supply 0.6-1.2 V.
+
+The class is a frozen dataclass so it can be used as a static argument to
+``jax.jit`` and hashed into compilation caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+ADCMode = Literal["floor", "nearest"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    """Operating point of one P-8T SRAM CIM macro.
+
+    Attributes:
+      rows_per_group: local arrays sharing one ABL (hardware constant: 16).
+      rows_active: activated rows per accumulation (paper sweeps 4/8/16).
+      act_bits: input activation precision (paper: 4).
+      weight_bits: weight precision, bit-sliced across columns (paper: 8).
+      adc_bits: flash ADC resolution (paper: 4, coarse-fine).
+      cutoff: partial-sum cutoff; threshold = (1 - cutoff) * 2**q_full
+        (paper Sec. IV definition; operating point cutoff=0.5 -> Th=128 of
+        the 241-level pMAC space at 16 rows, ADC step 8).
+      adc_mode: 'floor' reproduces comparator semantics (code = #refs <=
+        value); 'nearest' is a beyond-paper readout option.
+      vdd: supply voltage in volts (paper range 0.6-1.2).
+      sigma_dac_mv: DAC (CBL charge-sharing) std-dev in mV, worst case
+        (paper: 1.8 mV at code 8, 0.6 V). Scales linearly with vdd/0.6.
+      sigma_cmp_mv: comparator input-referred offset std-dev in mV.
+      c_abl_ratio: kappa = C_ABL / C_CBL parasitic ratio. The in-SRAM
+        reference columns share the same kappa, so ideal ADC codes are
+        invariant to it (tested).
+      noisy: enable hardware-error injection (paper's "w/ HW errors").
+      macro_rows/macro_cols: physical array geometry (256 x 80).
+      n_ref_cols: AMU_REF columns used for ADC reference generation (16).
+    """
+
+    rows_per_group: int = 16
+    rows_active: int = 16
+    act_bits: int = 4
+    weight_bits: int = 8
+    adc_bits: int = 4
+    cutoff: float = 0.5
+    adc_mode: ADCMode = "floor"
+    vdd: float = 0.9
+    sigma_dac_mv: float = 1.8
+    sigma_cmp_mv: float = 2.0
+    c_abl_ratio: float = 0.0
+    noisy: bool = False
+    macro_rows: int = 256
+    macro_cols: int = 80
+    n_ref_cols: int = 16
+
+    def __post_init__(self) -> None:
+        if self.rows_active > self.rows_per_group:
+            raise ValueError(
+                f"rows_active={self.rows_active} exceeds rows_per_group="
+                f"{self.rows_per_group}"
+            )
+        if self.rows_active < 1:
+            raise ValueError("rows_active must be >= 1")
+        if not (1 <= self.adc_bits <= self.q_full):
+            raise ValueError(
+                f"adc_bits={self.adc_bits} out of range [1, {self.q_full}]"
+            )
+        if not (0.0 <= self.cutoff < 1.0):
+            raise ValueError(f"cutoff={self.cutoff} must be in [0, 1)")
+        if self.act_bits < 1 or self.weight_bits < 1:
+            raise ValueError("act_bits and weight_bits must be >= 1")
+
+    # ---- derived quantities (paper Sec. III / IV nomenclature) ----
+
+    @property
+    def act_levels(self) -> int:
+        """Input DAC levels (16 for 4-bit)."""
+        return 1 << self.act_bits
+
+    @property
+    def act_max(self) -> int:
+        """Maximum activation code (15 for 4-bit)."""
+        return self.act_levels - 1
+
+    @property
+    def pmac_max(self) -> int:
+        """Maximum partial-MAC value: rows_active * act_max.
+
+        At 16 rows this is 240 -> the paper's 241-level pMAC space.
+        """
+        return self.rows_active * self.act_max
+
+    @property
+    def pmac_levels(self) -> int:
+        return self.pmac_max + 1
+
+    @property
+    def q_full(self) -> int:
+        """ADC resolution needed for exact pMAC readout (paper's q)."""
+        return max(1, math.ceil(math.log2(self.pmac_levels)))
+
+    @property
+    def threshold(self) -> int:
+        """Cutoff threshold in pMAC units: (1 - cutoff) * 2**q_full.
+
+        Paper operating point: (1 - 0.5) * 256 = 128 at 16 rows.
+        """
+        return max(1, int(round((1.0 - self.cutoff) * (1 << self.q_full))))
+
+    @property
+    def adc_step(self) -> float:
+        """ADC LSB in pMAC units (Delta = threshold / 2**adc_bits = 8)."""
+        return self.threshold / (1 << self.adc_bits)
+
+    @property
+    def adc_codes(self) -> int:
+        return 1 << self.adc_bits
+
+    @property
+    def share_denom(self) -> float:
+        """Charge-sharing denominator 16 * (16 + kappa) mapping pMAC->V.
+
+        V_ABL = VDD * (1 - pMAC / share_denom); kappa = C_ABL/C_CBL.
+        """
+        return self.rows_per_group * (self.rows_per_group + self.c_abl_ratio)
+
+    @property
+    def sigma_pmac(self) -> float:
+        """Total analog noise std-dev expressed in pMAC units.
+
+        Voltage-domain sigmas convert through |dpMAC/dV| = share_denom/VDD.
+        The ABL charge share AVERAGES the 16 CBL voltages, so
+        rows_active independent per-CBL DAC errors contribute
+        sigma_dac * sqrt(rows_active) / rows_per_group to V_ABL (the
+        sqrt from independence, the /16 from charge-sharing averaging
+        -- dropping the /16 overstates DAC noise 16x and collapses
+        accuracy, unlike the paper's ~1% drops). The comparator offset
+        applies once, directly at the ADC input. Sigmas are specified
+        at 0.6 V and scale with vdd, so the pMAC-domain sigma is
+        vdd-independent to first order (matches the voltage-domain
+        macro model: tested).
+        """
+        scale = self.vdd / 0.6
+        sigma_dac_v = self.sigma_dac_mv * 1e-3 * scale
+        sigma_cmp_v = self.sigma_cmp_mv * 1e-3 * scale
+        dac_term = (
+            sigma_dac_v * math.sqrt(self.rows_active) / self.rows_per_group
+        ) ** 2
+        cmp_term = sigma_cmp_v**2
+        return math.sqrt(dac_term + cmp_term) * self.share_denom / self.vdd
+
+    @property
+    def n_weight_cols(self) -> int:
+        """Columns carrying weight bit-planes (80 - 16 ref = 64)."""
+        return self.macro_cols - self.n_ref_cols
+
+    @property
+    def n_outputs(self) -> int:
+        """Output channels per macro (64 cols / 8 bit-planes = 8)."""
+        return self.n_weight_cols // self.weight_bits
+
+    @property
+    def macs_per_cycle(self) -> int:
+        """MACs completed per macro cycle (paper: 16 x 8 = 128)."""
+        return self.rows_per_group * self.n_outputs
+
+    def replace(self, **kw) -> "CIMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# The paper's published operating points.
+PAPER_OP_16ROWS = CIMConfig(rows_active=16, cutoff=0.5, adc_bits=4)
+PAPER_OP_8ROWS = CIMConfig(rows_active=8, cutoff=0.5, adc_bits=4)

@@ -1,0 +1,236 @@
+"""Quantizers and bit-slicing for the CIM datapath.
+
+The macro consumes unsigned ``act_bits``-wide activation codes and 1-bit
+weight planes sliced from signed ``weight_bits`` integers (two's
+complement, MSB plane carries weight -2**(B-1) in the digital shift-add).
+
+Activations in the paper are post-ReLU (unsigned). Transformer
+activations are signed, so we support an asymmetric zero-point: the macro
+still only sees unsigned codes; the ``-scale * zero_point * sum(W)``
+correction happens digitally (see matmul.py). This extension is flagged
+as beyond-paper in DESIGN.md Sec. 2.
+
+All quantizers come with straight-through-estimator (STE) variants for
+quantization-aware training.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CIMConfig
+
+
+class QuantizedActs(NamedTuple):
+    """Unsigned activation codes plus dequantization parameters.
+
+    x ~= scale * (codes - zero_point)
+    """
+
+    codes: jax.Array  # int32 in [0, 2**act_bits - 1]
+    scale: jax.Array  # f32, broadcastable to x
+    zero_point: jax.Array  # int32, broadcastable to x
+
+
+class QuantizedWeights(NamedTuple):
+    """Signed weight codes plus per-output-channel scale.
+
+    w ~= scale * codes,  codes int32 in [-2**(B-1), 2**(B-1)-1]
+    """
+
+    codes: jax.Array  # int32, shape [K, N]
+    scale: jax.Array  # f32, shape [1, N] (per out-channel) or scalar
+
+
+def _reduce_all_but(x: jax.Array, keep_axis: int | None):
+    if keep_axis is None:
+        return tuple(range(x.ndim))
+    keep_axis = keep_axis % x.ndim
+    return tuple(a for a in range(x.ndim) if a != keep_axis)
+
+
+def _range_stats(x, axes, keep, clip_pct: float):
+    """(lo, hi) of the quantization range; clip_pct < 1 uses percentile
+    clipping (outlier-robust calibration -- with per-tensor max scaling
+    a single outlier collapses every other activation onto 1-2 DAC
+    codes and the ADC's step-8 noise then swamps the signal)."""
+    if clip_pct >= 1.0:
+        return (jnp.min(x, axis=axes, keepdims=keep),
+                jnp.max(x, axis=axes, keepdims=keep))
+    q = clip_pct * 100.0
+    hi = jnp.percentile(x, q, axis=axes, keepdims=keep)
+    lo = jnp.percentile(x, 100.0 - q, axis=axes, keepdims=keep)
+    return lo, hi
+
+
+def quantize_acts(
+    x: jax.Array,
+    act_bits: int,
+    *,
+    symmetric: bool = False,
+    per_token: bool = False,
+    clip_pct: float = 1.0,
+    eps: float = 1e-8,
+) -> QuantizedActs:
+    """Dynamic asymmetric (or unsigned-symmetric) activation quantization.
+
+    symmetric=True assumes x >= 0 (post-ReLU, the paper's setting):
+    codes = round(x / scale), zero_point = 0.
+    Otherwise: affine with zero-point so signed tensors map onto the
+    unsigned DAC codes. clip_pct in (0, 1] enables percentile-clipped
+    calibration of the range.
+    """
+    qmax = (1 << act_bits) - 1
+    if per_token:
+        axes = tuple(range(1, x.ndim))  # reduce all but leading dim
+        keep = True
+    else:
+        axes = tuple(range(x.ndim))
+        keep = True
+    if symmetric:
+        _, hi = _range_stats(x, axes, keep, clip_pct)
+        scale = jnp.maximum(hi, eps) / qmax
+        zp = jnp.zeros_like(scale, dtype=jnp.int32)
+        codes = jnp.clip(jnp.round(x / scale), 0, qmax).astype(jnp.int32)
+    else:
+        lo, hi = _range_stats(x, axes, keep, clip_pct)
+        hi = jnp.maximum(hi, lo + eps)
+        scale = (hi - lo) / qmax
+        zp = jnp.clip(jnp.round(-lo / scale), 0, qmax).astype(jnp.int32)
+        codes = jnp.clip(jnp.round(x / scale) + zp, 0, qmax).astype(jnp.int32)
+    return QuantizedActs(codes, scale, zp)
+
+
+def dequantize_acts(q: QuantizedActs) -> jax.Array:
+    return q.scale * (q.codes - q.zero_point).astype(q.scale.dtype)
+
+
+def quantize_weights(
+    w: jax.Array,
+    weight_bits: int,
+    *,
+    per_channel: bool = True,
+    eps: float = 1e-8,
+) -> QuantizedWeights:
+    """Symmetric signed weight quantization (per output channel).
+
+    w: [..., K, N]; channel axis is the last one.
+    """
+    qmax = (1 << (weight_bits - 1)) - 1
+    if per_channel:
+        axes = _reduce_all_but(w, keep_axis=-1)
+        amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    scale = jnp.maximum(amax, eps) / qmax
+    codes = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return QuantizedWeights(codes, scale)
+
+
+def dequantize_weights(q: QuantizedWeights) -> jax.Array:
+    return q.scale * q.codes.astype(q.scale.dtype)
+
+
+def bitslice_weights(codes: jax.Array, weight_bits: int) -> jax.Array:
+    """Slice signed int codes into binary planes (two's complement).
+
+    Returns uint planes with shape [weight_bits, *codes.shape]; plane b
+    holds bit b of the two's-complement representation. Reconstruction:
+      codes = sum_b plane_sign(b) * 2**b * planes[b]
+    with plane_sign(B-1) = -1 (MSB) and +1 otherwise.
+    """
+    mask = (1 << weight_bits) - 1
+    unsigned = jnp.bitwise_and(codes.astype(jnp.int32), mask)
+    shifts = jnp.arange(weight_bits, dtype=jnp.int32)
+    shifts = shifts.reshape((weight_bits,) + (1,) * codes.ndim)
+    planes = jnp.bitwise_and(
+        jnp.right_shift(unsigned[None, ...], shifts), 1
+    )
+    return planes.astype(jnp.int32)
+
+
+def plane_signs(weight_bits: int) -> jax.Array:
+    """Shift-add weighting per plane: [1, 2, 4, ..., -2**(B-1)]."""
+    w = 2 ** jnp.arange(weight_bits, dtype=jnp.int32)
+    return w.at[weight_bits - 1].multiply(-1)
+
+
+def unslice_weights(planes: jax.Array, weight_bits: int) -> jax.Array:
+    """Inverse of bitslice_weights (digital shift-add identity)."""
+    signs = plane_signs(weight_bits).reshape(
+        (weight_bits,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes * signs, axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators (QAT)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ste_round(x: jax.Array) -> jax.Array:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+@jax.custom_vjp
+def ste_clip(x: jax.Array, lo: float, hi: float) -> jax.Array:
+    return jnp.clip(x, lo, hi)
+
+
+def _ste_clip_fwd(x, lo, hi):
+    return jnp.clip(x, lo, hi), (x, lo, hi)
+
+
+def _ste_clip_bwd(res, g):
+    x, lo, hi = res
+    mask = ((x >= lo) & (x <= hi)).astype(g.dtype)
+    return (g * mask, None, None)
+
+
+ste_clip.defvjp(_ste_clip_fwd, _ste_clip_bwd)
+
+
+def fake_quant_acts(
+    x: jax.Array, cfg: CIMConfig, *, symmetric: bool = False
+) -> jax.Array:
+    """Differentiable (STE) activation fake-quant to the DAC grid."""
+    qmax = float(cfg.act_max)
+    if symmetric:
+        hi = jnp.maximum(jax.lax.stop_gradient(jnp.max(x)), 1e-8)
+        scale = hi / qmax
+        codes = ste_clip(ste_round(x / scale), 0.0, qmax)
+        return codes * scale
+    hi = jax.lax.stop_gradient(jnp.max(x))
+    lo = jax.lax.stop_gradient(jnp.min(x))
+    hi = jnp.maximum(hi, lo + 1e-8)
+    scale = (hi - lo) / qmax
+    zp = jnp.round(-lo / scale)
+    codes = ste_clip(ste_round(x / scale) + zp, 0.0, qmax)
+    return (codes - zp) * scale
+
+
+def fake_quant_weights(w: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """Differentiable (STE) weight fake-quant to the signed grid."""
+    qmax = float((1 << (cfg.weight_bits - 1)) - 1)
+    axes = _reduce_all_but(w, keep_axis=-1)
+    amax = jax.lax.stop_gradient(
+        jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    )
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    codes = ste_clip(ste_round(w / scale), -qmax - 1.0, qmax)
+    return codes * scale

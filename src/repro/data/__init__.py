@@ -1,0 +1,6 @@
+"""Data substrate: deterministic synthetic tasks + sharded prefetch."""
+
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import MarkovLM, SyntheticCIFAR
+
+__all__ = ["MarkovLM", "ShardedLoader", "SyntheticCIFAR"]

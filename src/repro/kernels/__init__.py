@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the CIM hot spots.
+
+cim_mac.py : GPQ (grouped-partial-sum quantized) matmul -- the macro's
+             16-row ABL accumulation + fused ADC transfer, VMEM-tiled.
+ops.py     : jit'd wrappers with backend dispatch (TPU native /
+             interpret-mode on CPU).
+ref.py     : pure-jnp oracle used by the allclose sweeps.
+"""
+
+from repro.kernels.cim_mac import gpq_matmul
+from repro.kernels.ops import cim_matmul_kernel
+from repro.kernels.ref import cim_matmul_ref
+
+__all__ = ["cim_matmul_kernel", "cim_matmul_ref", "gpq_matmul"]

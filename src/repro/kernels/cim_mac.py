@@ -1,0 +1,176 @@
+"""Pallas TPU kernel for the GPQ (grouped-partial-sum quantized) matmul.
+
+This is the perf-critical hot spot of the paper's technique mapped to
+TPU (DESIGN.md Sec. 2): the 16-row ABL charge-sharing accumulation
+becomes a grouped contraction, and the ADC transfer (cutoff clip + floor
+quantization + bit-plane shift-add) is fused onto the partial-sum tile
+while it lives in VMEM -- one HBM round trip per output tile instead of
+one per (group x bit-plane) intermediate, which is what the naive jnp
+formulation pays.
+
+Tiling (BlockSpec):
+  grid = (M/bm, N/bn, K/bk), k innermost ("arbitrary" semantics so the
+  output tile accumulates across k steps).
+  x tile   [bm, bk]   f32 activation codes (values 0..15, exact in f32)
+  w tile   [bk, bn]   i32 signed weight codes
+  out tile [bm, bn]   f32 accumulated shift-add results
+
+Inside one k step the kernel unpacks the two's-complement planes of the
+w tile (b planes -> the expanded [gk, rows, B*bn] operand), runs one
+batched MXU contraction per group batch
+  [gk, bm, rows] x [gk, rows, B*bn] -> [gk, bm, B*bn]
+and applies the ADC nonlinearity elementwise before reducing (g, b) into
+the output tile.
+
+The MXU sees a contraction depth of rows (16): that granularity is
+*semantic* -- the ADC sits between 16-row groups, so deeper contraction
+would change the computed function. This bounds achievable MXU
+utilization at rows/128 for the faithful mode; see EXPERIMENTS.md
+Sec. Perf for the measured consequences and the cim-exact escape hatch.
+
+f32 accumulation is exact for integers < 2**24; with |contrib| per
+(group, plane) <= 2**(B-1) * threshold the wrapper asserts
+K / rows * 2**(B-1) * threshold < 2**24 (K <~ 16k at the paper op point)
+and falls back to the jnp path beyond that.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.params import CIMConfig
+
+
+def _gpq_kernel(
+    x_ref,
+    w_ref,
+    out_ref,
+    *,
+    rows: int,
+    weight_bits: int,
+    adc_step: float,
+    adc_codes: int,
+    nsteps_k: int,
+):
+    """One (i, j, k) grid step; accumulates into out_ref."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # [bm, bk] f32
+    w = w_ref[...]  # [bk, bn] i32
+    bm, bk = x.shape
+    bn = w.shape[1]
+    gk = bk // rows
+    b = weight_bits
+
+    # Two's-complement plane expansion: [bk, bn] -> [bk, B, bn] 0/1.
+    mask = (1 << b) - 1
+    u = jnp.bitwise_and(w, mask)
+    shifts = jnp.arange(b, dtype=jnp.int32)[None, :, None]
+    planes = jnp.bitwise_and(
+        jnp.right_shift(u[:, None, :], shifts), 1
+    ).astype(jnp.float32)
+    # Group the contraction dim: [gk, rows, B*bn].
+    pe = planes.reshape(gk, rows, b * bn)
+
+    # Group the activations: [gk, bm, rows].
+    xg = x.reshape(bm, gk, rows).transpose(1, 0, 2)
+
+    # Batched MXU contraction over the 16-row groups.
+    pmac = jax.lax.dot_general(
+        xg,
+        pe,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # [gk, bm, B*bn]
+
+    # Fused ADC transfer: cutoff clip + floor quantization, then the
+    # digital shift-add with the MSB plane negative (two's complement).
+    code = jnp.clip(jnp.floor(pmac / adc_step), 0, adc_codes - 1)
+    deq = code.reshape(gk, bm, b, bn) * adc_step
+    signs = (2.0 ** jnp.arange(b, dtype=jnp.float32)).at[b - 1].multiply(-1.0)
+    contrib = jnp.einsum("gmbn,b->mn", deq, signs)
+
+    out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def gpq_matmul(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas GPQ matmul. x: [M, K] codes, w: [K, N] signed codes.
+
+    Shapes are padded to tile multiples; K padding is benign (zero codes
+    contribute zero pMAC -> ADC code 0 -> no shift-add contribution).
+    """
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, (x_codes.shape, w_codes.shape)
+    rows = cfg.rows_active
+    if bk % rows != 0:
+        raise ValueError(f"bk={bk} must be a multiple of rows_active={rows}")
+    # f32 exact-integer accumulation bound (see module docstring).
+    max_abs = (k + rows - 1) // rows * (1 << (cfg.weight_bits - 1)) * cfg.threshold
+    if max_abs >= (1 << 24) * 0.5 * cfg.adc_step:
+        raise ValueError(
+            f"K={k} too deep for exact f32 accumulation at this operating "
+            "point; use core.matmul.cim_matmul_int"
+        )
+
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    x_p = jnp.pad(x_codes.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    w_p = jnp.pad(w_codes.astype(jnp.int32), ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    kernel = functools.partial(
+        _gpq_kernel,
+        rows=rows,
+        weight_bits=cfg.weight_bits,
+        adc_step=float(cfg.adc_step),
+        adc_codes=cfg.adc_codes,
+        nsteps_k=grid[2],
+    )
+
+    kwargs = {}
+    if not interpret:
+        # TPU compiler hints: m/n parallel, k sequential (accumulation).
+        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+        params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams"
+        )
+        kwargs["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(x_p, w_p)
+    return out[:m, :n]

@@ -1,0 +1,44 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Backend dispatch: the kernel lowers natively on TPU; everywhere else we
+run Pallas interpret mode (bit-exact semantics, executed on CPU), which
+is how the correctness sweeps in tests/test_kernels.py validate it
+against ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CIMConfig
+from repro.kernels.cim_mac import gpq_matmul
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cim_matmul_kernel(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """GPQ matmul via the Pallas kernel; drop-in for cim_matmul_int.
+
+    Noiseless by design (production inference path); Monte-Carlo noise
+    analysis uses the jnp behavioral model.
+    """
+    return gpq_matmul(
+        x_codes,
+        w_codes,
+        cfg,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=_use_interpret(),
+    ).astype(jnp.float32)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the GPQ (grouped-partial-sum quantized) matmul.
+
+Independent of core/matmul.py's scan formulation on purpose: this is the
+vectorized "textbook" statement of the macro semantics used to
+cross-validate both the behavioral model and the Pallas kernel.
+
+  pmac[m, g, b, n] = sum_{k in group g} x[m, k] * bit_b(w[k, n])
+  code             = clip(floor(pmac / step), 0, 2**adc_bits - 1)
+  y[m, n]          = sum_{g, b} sign_b * step * code
+
+Noiseless by definition (the kernel is the production path; hardware-
+error Monte-Carlo runs through core.matmul.cim_matmul_int).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CIMConfig
+from repro.core.quant import bitslice_weights, plane_signs
+
+
+def cim_matmul_ref(
+    x_codes: jax.Array, w_codes: jax.Array, cfg: CIMConfig
+) -> jax.Array:
+    """[M, K] x [K, N] -> [M, N] float32, macro semantics, vectorized."""
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2
+    rows = cfg.rows_active
+    b = cfg.weight_bits
+    k_pad = -(-k // rows) * rows
+
+    x = jnp.pad(x_codes.astype(jnp.float32), ((0, 0), (0, k_pad - k)))
+    w = jnp.pad(w_codes.astype(jnp.int32), ((0, k_pad - k), (0, 0)))
+    g = k_pad // rows
+
+    planes = bitslice_weights(w, b).astype(jnp.float32)  # [B, Kp, N]
+    planes = planes.reshape(b, g, rows, n)
+    xg = x.reshape(m, g, rows)
+
+    pmac = jnp.einsum("mgr,bgrn->mgbn", xg, planes)
+    code = jnp.clip(
+        jnp.floor(pmac / cfg.adc_step), 0, cfg.adc_codes - 1
+    )
+    signs = plane_signs(b).astype(jnp.float32)
+    return jnp.einsum("mgbn,b->mn", code * cfg.adc_step, signs)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve CLIs.
+
+dryrun.py must be the process entry point (python -m
+repro.launch.dryrun) because it sets XLA_FLAGS before jax init.
+"""

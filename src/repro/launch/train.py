@@ -1,0 +1,87 @@
+"""Training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b \
+      --smoke --steps 50 --batch 8 --seq 128 [--cim-mode cim] \
+      [--ckpt-dir /tmp/ck --resume]
+
+Full-size archs train under the production mesh when real hardware is
+attached; in this CPU container, --smoke selects the reduced configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--cim-mode", default=None,
+                    help="fp | cim-exact | cim | cim-kernel")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config
+    from repro.data import MarkovLM, ShardedLoader
+    from repro.models import transformer
+    from repro.optim import OptimizerConfig
+    from repro.train import (
+        Trainer,
+        TrainerConfig,
+        init_train_state,
+        make_train_step,
+    )
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.cim_mode:
+        cfg = cfg.replace(cim=cfg.cim.__class__(mode=args.cim_mode))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init(key, cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M cim={cfg.cim.mode}")
+
+    def loss(params, batch, key):
+        return transformer.loss_fn(params, batch, cfg, key=key)
+
+    opt_cfg = OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=max(args.steps // 20, 1))
+    step_fn = make_train_step(
+        loss, opt_cfg, microbatches=args.microbatches,
+        compress=args.compress_grads,
+    )
+    state = init_train_state(key, params, compress=args.compress_grads)
+
+    lm = MarkovLM(cfg.vocab_size)
+    loader = ShardedLoader(
+        lambda step, shard, n: lm.batch(args.batch, args.seq, step,
+                                        shard=shard, n_shards=n)
+    )
+    tcfg = TrainerConfig(checkpoint_dir=args.ckpt_dir,
+                         checkpoint_every=args.ckpt_every)
+    trainer = Trainer(step_fn, state, loader, tcfg)
+    if args.resume:
+        at = trainer.maybe_resume()
+        print(f"resumed at step {at}")
+    hist = trainer.run(args.steps)
+    trainer.final_checkpoint()
+    loader.close()
+    for h in hist:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} {h['sec']*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

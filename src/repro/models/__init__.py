@@ -1,0 +1,26 @@
+"""Model zoo: unified config-driven LM stack + ResNet-20 (paper's CNN).
+
+transformer.py is the single entry point for all 10 assigned LM archs
+(dense GQA, local/global, MoE, Mamba hybrid, RWKV6, enc-dec, VLM stub);
+resnet.py is the paper's own CIFAR network used for Table I.
+"""
+
+from repro.models import (
+    attention,
+    common,
+    mamba,
+    moe,
+    resnet,
+    rwkv,
+    transformer,
+)
+
+__all__ = [
+    "attention",
+    "common",
+    "mamba",
+    "moe",
+    "resnet",
+    "rwkv",
+    "transformer",
+]

@@ -1,0 +1,238 @@
+"""Parameter-spec machinery and basic layers (pure-function style).
+
+Every layer module defines a ``*_spec(cfg) -> dict[str, ParamSpec]``;
+``init_params(key, spec)`` materializes weights, ``logical_axes(spec)``
+produces the matching pytree of logical-axis tuples consumed by
+repro.distributed.sharding. One source of truth for shapes/axes/init.
+
+Linear layers route through core.cim_matmul so the paper's macro is a
+per-layer execution mode (CIMPolicy), not a separate model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CIMPolicy
+from repro.core.matmul import cim_matmul
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == ndim
+    init: str = "normal"  # normal | zeros | ones | normal:<std> | uniform:<s>
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    kind, _, arg = spec.init.partition(":")
+    if kind == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if kind == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if kind == "normal":
+        std = float(arg) if arg else 0.02
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if kind == "uniform":
+        s = float(arg) if arg else 1.0
+        return jax.random.uniform(
+            key, spec.shape, minval=-s, maxval=s
+        ).astype(spec.dtype)
+    if kind == "fanin":
+        fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init '{spec.init}'")
+
+
+def is_spec_tree(tree: Any) -> bool:
+    return isinstance(tree, ParamSpec)
+
+
+def init_params(key: jax.Array, spec_tree: Any) -> Params:
+    """Materialize a (nested dict of) ParamSpec into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def logical_axes(spec_tree: Any) -> Any:
+    """Pytree of logical-axis tuples matching init_params' structure."""
+    return jax.tree.map(
+        lambda s: s.axes,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Linear through the CIM execution layer
+# ---------------------------------------------------------------------------
+
+
+def linear_spec(
+    d_in: int,
+    d_out: int,
+    in_axis: str | None,
+    out_axis: str | None,
+    *,
+    bias: bool = False,
+    init: str = "fanin",
+) -> dict:
+    spec = {"w": ParamSpec((d_in, d_out), (in_axis, out_axis), init)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (out_axis,), "zeros")
+    return spec
+
+
+def linear_apply(
+    params: Params,
+    x: jax.Array,
+    policy: CIMPolicy | None = None,
+    *,
+    cim_enabled: bool = True,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """y = x @ w (+ b), optionally through the macro model.
+
+    cim_enabled gates per-matmul-family application (e.g. router always
+    digital); bias addition is always digital (the macro only produces
+    the MAC, paper Sec. III).
+    """
+    w = params["w"]
+    if isinstance(w, dict):  # int8 weight-only serving form
+        from repro.serve.quantized import dequantize_weight
+
+        w = dequantize_weight(w, x.dtype)
+    if policy is None or policy.mode == "fp" or not cim_enabled:
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    else:
+        y = cim_matmul(
+            x,
+            w,
+            policy.cim,
+            mode=policy.mode,
+            key=key,
+            act_symmetric=policy.act_symmetric,
+            act_clip_pct=policy.act_clip_pct,
+        )
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / MLPs
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int, axis: str = "embed") -> dict:
+    return {"scale": ParamSpec((d,), (axis,), "ones")}
+
+
+def rmsnorm_apply(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_spec(d: int, axis: str = "embed") -> dict:
+    return {
+        "scale": ParamSpec((d,), (axis,), "ones"),
+        "bias": ParamSpec((d,), (axis,), "zeros"),
+    }
+
+
+def layernorm_apply(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32
+    )
+    return y.astype(dtype)
+
+
+def embedding_spec(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), "normal:0.02")}
+
+
+def embedding_apply(params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def mlp_spec(d: int, d_ff: int, act: str) -> dict:
+    if act == "silu":  # SwiGLU
+        return {
+            "gate": linear_spec(d, d_ff, "embed", "mlp"),
+            "up": linear_spec(d, d_ff, "embed", "mlp"),
+            "down": linear_spec(d_ff, d, "mlp", "embed"),
+        }
+    return {
+        "up": linear_spec(d, d_ff, "embed", "mlp"),
+        "down": linear_spec(d_ff, d, "mlp", "embed"),
+    }
+
+
+def mlp_apply(
+    params: Params,
+    x: jax.Array,
+    act: str,
+    policy: CIMPolicy | None,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    en = policy.apply_to_mlp if policy else False
+    keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    if act == "silu":
+        g = linear_apply(params["gate"], x, policy, cim_enabled=en, key=keys[0])
+        u = linear_apply(params["up"], x, policy, cim_enabled=en, key=keys[1])
+        h = jax.nn.silu(g) * u
+    else:
+        u = linear_apply(params["up"], x, policy, cim_enabled=en, key=keys[0])
+        h = jax.nn.gelu(u)
+    return linear_apply(params["down"], h, policy, cim_enabled=en, key=keys[2])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [..., seq, n_heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

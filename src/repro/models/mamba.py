@@ -1,0 +1,273 @@
+"""Mamba (S6 selective-state-space) block for the Jamba hybrid arch.
+
+Weight-stationary projections (in/out/x/dt) can run through the CIM
+macro; the selective scan itself is a data-dependent recurrence and
+stays digital (DESIGN.md Sec. 5).
+
+Two scan implementations:
+  'sequential' : lax.scan over time; O(L) latency, minimal memory.
+  'chunked'    : lax.scan over chunks with an associative scan inside
+                 each chunk -- the TPU-friendly compromise between the
+                 O(L) sequential critical path and the O(L * d_state)
+                 memory of a full associative scan.
+Decode keeps a (conv window, ssm state) cache and costs O(1) per token,
+which is what makes jamba a long_500k-eligible arch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CIMPolicy, ModelConfig
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # [B, d_conv - 1, d_inner] trailing inputs
+    ssm: jax.Array  # [B, d_inner, d_state]
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, mc.d_state, mc.d_conv
+
+
+def mamba_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, d_state, d_conv = _dims(cfg)
+    return {
+        "in_proj": common.linear_spec(d, 2 * d_in, "embed", "mlp"),
+        "conv_w": ParamSpec((d_conv, d_in), (None, "mlp"), "fanin"),
+        "conv_b": ParamSpec((d_in,), ("mlp",), "zeros"),
+        "x_proj": common.linear_spec(
+            d_in, dt_rank + 2 * d_state, "mlp", None
+        ),
+        "dt_proj": common.linear_spec(dt_rank, d_in, None, "mlp",
+                                      bias=True, init="uniform:0.1"),
+        # S4D-real init: A_log = log(1..d_state) per channel.
+        "a_log": ParamSpec((d_in, d_state), ("mlp", None), "zeros"),
+        "d_skip": ParamSpec((d_in,), ("mlp",), "ones"),
+        "out_proj": common.linear_spec(d_in, d, "mlp", "embed"),
+    }
+
+
+def init_mamba_alog(params: dict, cfg: ModelConfig) -> dict:
+    """Overwrite a_log with the S4D-real init (called post init_params)."""
+    d_in, _, d_state, _ = _dims(cfg)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, 1))
+    params = dict(params)
+    params["a_log"] = jnp.log(a)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    d_in, _, d_state, d_conv = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, d_conv - 1, d_in), dtype),
+        ssm=jnp.zeros((batch, d_in, d_state), dtype),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: [B, L, C], w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is 4; unrolled adds beat a conv call here
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_raw(params, xc, cfg):
+    """Input-dependent (dt, B, C) plus static A (pre-discretization).
+
+    The d_state expansion (a_bar = exp(dt (x) A), bx = dt*xc (x) B) is
+    deliberately NOT done here: materializing the [B, L, d_in, d_state]
+    tensors as scan inputs costs d_state x the memory of their factors
+    (measured: 4.3 GiB x many live buffers on jamba prefill_32k, 75 GiB
+    temp). The chunked scan expands per 128-token chunk instead.
+    """
+    from repro.serve.quantized import maybe_dequant
+
+    d_in, dt_rank, d_state, _ = _dims(cfg)
+    proj = xc @ maybe_dequant(params["x_proj"]["w"], xc.dtype)
+    dt, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ maybe_dequant(params["dt_proj"]["w"], xc.dtype)
+        + params["dt_proj"]["b"].astype(xc.dtype)
+    )  # [..., d_in]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # [d_in, d_state]
+    return dt, b_mat, c_mat, a
+
+
+def _discretize(dt, xc, b_mat, a):
+    """ZOH for A, Euler for B (the Mamba paper's discretization)."""
+    a_bar = jnp.exp(dt[..., None].astype(jnp.float32) * a)
+    bx = ((dt * xc)[..., None].astype(jnp.float32)
+          * b_mat[..., None, :].astype(jnp.float32))
+    return a_bar, bx
+
+
+def _ssm_params(params, xc, cfg):
+    """Discretized (a_bar, bx, c_mat) -- decode / sequential paths."""
+    dt, b_mat, c_mat, a = _ssm_raw(params, xc, cfg)
+    a_bar, bx = _discretize(dt, xc, b_mat, a)
+    return a_bar, bx, c_mat
+
+
+def _scan_sequential(a_bar, bx, c_mat, h0):
+    """a_bar/bx: [B, L, d_in, d_state], c: [B, L, d_state]."""
+
+    def step(h, inp):
+        ab, bxt, ct = inp
+        h = ab * h + bxt
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(a_bar, 1, 0),
+        jnp.moveaxis(bx, 1, 0),
+        jnp.moveaxis(c_mat, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def _scan_chunked(dt, xc, b_mat, c_mat, a, h0, chunk: int):
+    """Chunk the sequence; associative scan inside, carry across.
+
+    The scan streams the UNEXPANDED factors (dt*xc [B,L,d_in], B/C
+    [B,L,N]) and performs the d_state expansion per chunk inside the
+    body, so only [B, chunk, d_in, N] f32 tiles ever exist -- not
+    [B, L, d_in, N] (d_state x full-sequence memory; 75 GiB temp on
+    jamba prefill_32k before this restructuring).
+    """
+    b, l, d_in = dt.shape
+    pad = (-l) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> a_bar=1
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // chunk
+
+    dtxc = dt * xc  # [B, L, d_in], streamed instead of bx
+
+    def combine(p, q):
+        (a1, b1), (a2, b2) = p, q
+        return a1 * a2, a2 * b1 + b2
+
+    out_dtype = dt.dtype
+
+    def chunk_step(h, inp):
+        dt_c, dtxc_c, b_c, c_c = inp  # [B, chunk, d_in] / [B, chunk, N]
+        ab = jnp.exp(dt_c[..., None].astype(jnp.float32) * a)
+        bxt = (dtxc_c[..., None].astype(jnp.float32)
+               * b_c[..., None, :].astype(jnp.float32))
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ab, bxt), axis=1)
+        h_t = acc_a * h[:, None] + acc_b  # states at every step in chunk
+        y = jnp.einsum("blds,bls->bld", h_t, c_c.astype(jnp.float32))
+        # stacked ys are [nc, B, chunk, d_in]-sized: keep them in the
+        # activation dtype (the recurrence itself stays f32)
+        return h_t[:, -1], y.astype(out_dtype)
+
+    xs = tuple(
+        x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+        for x in (dt, dtxc, b_mat, c_mat)
+    )
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    ys = ys.swapaxes(0, 1).reshape(b, nc * chunk, d_in)
+    return ys[:, :l], h_last
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,  # [B, L, D]
+    cfg: ModelConfig,
+    *,
+    policy: CIMPolicy | None = None,
+    key: jax.Array | None = None,
+    return_cache: bool = False,
+):
+    """Training / prefill forward (state starts at zero).
+
+    With return_cache, also returns the MambaCache that decode_step
+    continues from (trailing conv window + final ssm state).
+    """
+    d_in, _, d_state, d_conv = _dims(cfg)
+    en = policy.apply_to_mlp if policy else False
+    ks = jax.random.split(key, 2) if key is not None else (None, None)
+    xz = common.linear_apply(params["in_proj"], x, policy, cim_enabled=en,
+                             key=ks[0])
+    xc_raw, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(
+        _causal_conv(xc_raw, params["conv_w"], params["conv_b"])
+    )
+    # The recurrence accumulates in f32 regardless of param/act dtype:
+    # products of per-step decays underflow fast in bf16, and mixed
+    # dtypes break associative_scan's internal concatenation.
+    h0 = jnp.zeros((x.shape[0], d_in, d_state), jnp.float32)
+    if cfg.mamba.scan_impl == "chunked":
+        dt, b_mat, c_mat, a = _ssm_raw(params, xc, cfg)
+        y, h_last = _scan_chunked(dt, xc, b_mat, c_mat, a, h0,
+                                  cfg.mamba.chunk_size)
+    else:
+        a_bar, bx, c_mat = _ssm_params(params, xc, cfg)
+        y, h_last = _scan_sequential(
+            a_bar.astype(jnp.float32), bx.astype(jnp.float32),
+            c_mat.astype(jnp.float32), h0)
+    y = y.astype(xc.dtype) + params["d_skip"].astype(xc.dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = common.linear_apply(params["out_proj"], y, policy,
+                              cim_enabled=en, key=ks[1])
+    if not return_cache:
+        return out
+    # Trailing conv window: last (d_conv - 1) *raw* inputs (pre-conv).
+    tail = xc_raw[:, -(d_conv - 1):, :]
+    pad = d_conv - 1 - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, MambaCache(conv=tail.astype(jnp.float32),
+                           ssm=h_last.astype(jnp.float32))
+
+
+def mamba_decode_step(
+    params: dict,
+    x: jax.Array,  # [B, 1, D]
+    cfg: ModelConfig,
+    cache: MambaCache,
+    *,
+    policy: CIMPolicy | None = None,
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, MambaCache]:
+    """O(1) per-token decode with (conv, ssm) state."""
+    d_in, _, d_state, d_conv = _dims(cfg)
+    en = policy.apply_to_mlp if policy else False
+    ks = jax.random.split(key, 2) if key is not None else (None, None)
+    xz = common.linear_apply(params["in_proj"], x, policy, cim_enabled=en,
+                             key=ks[0])
+    xc, z = jnp.split(xz[:, 0], 2, axis=-1)  # [B, d_in]
+
+    # Conv window update.
+    window = jnp.concatenate([cache.conv, xc[:, None]], axis=1)  # [B,K,dc]
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"]
+    xc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    a_bar, bx, c_mat = _ssm_params(params, xc, cfg)
+    h = (a_bar.astype(jnp.float32) * cache.ssm.astype(jnp.float32)
+         + bx.astype(jnp.float32))
+    y = jnp.einsum("bds,bs->bd", h, c_mat.astype(jnp.float32)
+                   ).astype(xc.dtype)
+    y = y + params["d_skip"].astype(y.dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = common.linear_apply(params["out_proj"], y[:, None], policy,
+                              cim_enabled=en, key=ks[1])
+    return out, MambaCache(conv=new_conv, ssm=h)

@@ -1,0 +1,196 @@
+"""ResNet-20 (CIFAR) -- the paper's own evaluation network.
+
+Convolutions execute as im2col + cim_matmul so the whole network can run
+through the macro model exactly as the paper's system simulations do
+(4-bit unsigned post-ReLU activations, 8-bit weights, grouped ADC
+readout with cutoff quantization, optional hardware errors).
+
+Functional with explicit BatchNorm state:
+  forward(params, bn_state, x, cfg, train) -> (logits, new_bn_state)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CIMPolicy
+from repro.core.matmul import cim_matmul
+from repro.models import common
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    n_classes: int = 10
+    widths: tuple[int, ...] = (16, 32, 64)
+    blocks_per_stage: int = 3  # ResNet-20 = 1 + 2*3*3 + 1 layers
+    bn_momentum: float = 0.9
+    cim: CIMPolicy = dataclasses.field(
+        default_factory=lambda: CIMPolicy(mode="fp", act_symmetric=True)
+    )
+
+
+def _conv_spec(kh, kw, cin, cout):
+    return ParamSpec((kh, kw, cin, cout), (None, None, "embed", "mlp"),
+                     "fanin")
+
+
+def _bn_spec(c):
+    return {
+        "scale": ParamSpec((c,), (None,), "ones"),
+        "bias": ParamSpec((c,), (None,), "zeros"),
+    }
+
+
+def _block_spec(cin, cout):
+    spec = {
+        "conv1": _conv_spec(3, 3, cin, cout),
+        "bn1": _bn_spec(cout),
+        "conv2": _conv_spec(3, 3, cout, cout),
+        "bn2": _bn_spec(cout),
+    }
+    if cin != cout:
+        spec["proj"] = _conv_spec(1, 1, cin, cout)
+        spec["bn_proj"] = _bn_spec(cout)
+    return spec
+
+
+def model_spec(cfg: ResNetConfig) -> dict:
+    w = cfg.widths
+    spec: dict = {"stem": _conv_spec(3, 3, 3, w[0]), "bn_stem": _bn_spec(w[0])}
+    cin = w[0]
+    for si, cout in enumerate(w):
+        for bi in range(cfg.blocks_per_stage):
+            spec[f"s{si}b{bi}"] = _block_spec(cin, cout)
+            cin = cout
+    spec["fc"] = common.linear_spec(w[-1], cfg.n_classes, "embed", "vocab",
+                                    bias=True)
+    return spec
+
+
+def init(key: jax.Array, cfg: ResNetConfig):
+    params = common.init_params(key, model_spec(cfg))
+    bn_state = _init_bn_state(params)
+    return params, bn_state
+
+
+def _init_bn_state(params, prefix=()):
+    state = {}
+    for k, v in params.items():
+        if k.startswith("bn"):
+            c = v["scale"].shape[0]
+            state[k] = {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+        elif isinstance(v, dict) and not {"w", "b"} >= set(v.keys()):
+            sub = _init_bn_state(v)
+            if sub:
+                state[k] = sub
+    return state
+
+
+def _conv(params_w, x, stride, policy: CIMPolicy | None,
+          key=None, cim_enabled: bool = True):
+    """Conv as im2col + (CIM) matmul. x: [B, H, W, C] NHWC."""
+    kh, kw, cin, cout = params_w.shape
+    if policy is None or policy.mode == "fp" or not cim_enabled:
+        return jax.lax.conv_general_dilated(
+            x, params_w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, Ho, Wo, cin*kh*kw] (channel-major patch layout)
+    b, ho, wo, pf = patches.shape
+    # conv_general_dilated_patches orders features as [cin, kh, kw];
+    # reorder the weight matrix to match.
+    wmat = jnp.transpose(params_w, (2, 0, 1, 3)).reshape(pf, cout)
+    y = cim_matmul(
+        patches.reshape(-1, pf), wmat, policy.cim, mode=policy.mode,
+        key=key, act_symmetric=policy.act_symmetric,
+        act_clip_pct=policy.act_clip_pct,
+    )
+    return y.reshape(b, ho, wo, cout)
+
+
+def _bn(params, state, x, train: bool, momentum: float):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mu,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    return y * params["scale"] + params["bias"], new_state
+
+
+def forward(
+    params: dict,
+    bn_state: dict,
+    x: jax.Array,  # [B, 32, 32, 3]
+    cfg: ResNetConfig,
+    *,
+    train: bool = False,
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    policy = cfg.cim
+    new_state: dict[str, Any] = {}
+    kidx = [0]
+
+    def nk():
+        kidx[0] += 1
+        return None if key is None else jax.random.fold_in(key, kidx[0])
+
+    h = _conv(params["stem"], x, 1, policy, key=nk(),
+              cim_enabled=policy.apply_to_stem)
+    h, new_state["bn_stem"] = _bn(params["bn_stem"], bn_state["bn_stem"],
+                                  h, train, cfg.bn_momentum)
+    h = jax.nn.relu(h)
+
+    cin = cfg.widths[0]
+    for si, cout in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            name = f"s{si}b{bi}"
+            bp, bs = params[name], bn_state[name]
+            ns = {}
+            stride = 2 if (bi == 0 and si > 0) else 1
+            r = _conv(bp["conv1"], h, stride, policy, key=nk())
+            r, ns["bn1"] = _bn(bp["bn1"], bs["bn1"], r, train,
+                               cfg.bn_momentum)
+            r = jax.nn.relu(r)
+            r = _conv(bp["conv2"], r, 1, policy, key=nk())
+            r, ns["bn2"] = _bn(bp["bn2"], bs["bn2"], r, train,
+                               cfg.bn_momentum)
+            if "proj" in bp:
+                sc = _conv(bp["proj"], h, stride, policy, key=nk())
+                sc, ns["bn_proj"] = _bn(bp["bn_proj"], bs["bn_proj"], sc,
+                                        train, cfg.bn_momentum)
+            else:
+                sc = h
+            h = jax.nn.relu(r + sc)
+            new_state[name] = ns
+            cin = cout
+
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    logits = common.linear_apply(params["fc"], h, policy,
+                                 cim_enabled=policy.apply_to_logits,
+                                 key=nk())
+    return logits, new_state
+
+
+def loss_fn(params, bn_state, batch, cfg: ResNetConfig, *, train=True,
+            key=None):
+    logits, new_state = forward(params, bn_state, batch["image"], cfg,
+                                train=train, key=key)
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, (new_state, {"loss": loss, "acc": acc})

@@ -1,0 +1,236 @@
+"""RWKV-6 ("Finch") block: data-dependent-decay linear attention.
+
+Attention-free arch: time-mix (WKV recurrence) + channel-mix. All
+projection matmuls (r/k/v/g/o, channel-mix) are weight-stationary and
+CIM-eligible; the WKV recurrence, token shift and the data-dependent
+decay are elementwise/dynamic and stay digital (DESIGN.md Sec. 5).
+
+The WKV state per head is [head, head] -- O(1) per decoded token, which
+is what makes rwkv6 a long_500k-eligible arch. Training runs the
+recurrence as an outer lax.scan over chunks with the inner chunk
+rematerialized, bounding backward-pass memory at one chunk of carries.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CIMPolicy, ModelConfig
+from repro.models import common
+from repro.models.common import ParamSpec
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")  # RWKV6 ddlerp output order
+
+
+class RWKVCache(NamedTuple):
+    shift_tm: jax.Array  # [B, D] last input to time-mix
+    shift_cm: jax.Array  # [B, D] last input to channel-mix
+    state: jax.Array  # [B, H, hd, hd] WKV state
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_size
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def rwkv_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    rc = cfg.rwkv
+    h, hd = _dims(cfg)
+    spec = {
+        "mu_x": ParamSpec((d,), ("embed",), "normal:0.02"),
+        "mix_w1": ParamSpec((d, 5 * rc.mix_lora), ("embed", None), "fanin"),
+        "mix_w2": ParamSpec((5, rc.mix_lora, d), (None, None, "embed"),
+                            "fanin"),
+        "decay_w0": ParamSpec((d,), ("embed",), "normal:0.02"),
+        "decay_w1": ParamSpec((d, rc.decay_lora), ("embed", None), "fanin"),
+        "decay_w2": ParamSpec((rc.decay_lora, d), (None, "embed"), "fanin"),
+        "bonus_u": ParamSpec((h, hd), ("heads", None), "normal:0.02"),
+        "ln_out": common.layernorm_spec(d),
+        "wr": common.linear_spec(d, d, "embed", "heads"),
+        "wk": common.linear_spec(d, d, "embed", "heads"),
+        "wv": common.linear_spec(d, d, "embed", "heads"),
+        "wg": common.linear_spec(d, d, "embed", "heads"),
+        "wo": common.linear_spec(d, d, "heads", "embed"),
+    }
+    for nm in _MIX_NAMES:
+        spec[f"mu_{nm}"] = ParamSpec((d,), ("embed",), "normal:0.02")
+    return spec
+
+
+def channelmix_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), "normal:0.02"),
+        "mu_r": ParamSpec((d,), ("embed",), "normal:0.02"),
+        "wk": common.linear_spec(d, cfg.d_ff, "embed", "mlp"),
+        "wv": common.linear_spec(cfg.d_ff, d, "mlp", "embed"),
+        "wr": common.linear_spec(d, d, "embed", "embed"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVCache:
+    h, hd = _dims(cfg)
+    d = cfg.d_model
+    return RWKVCache(
+        shift_tm=jnp.zeros((batch, d), dtype),
+        shift_cm=jnp.zeros((batch, d), dtype),
+        state=jnp.zeros((batch, h, hd, hd), dtype),
+    )
+
+
+def _ddlerp(params, x, xprev):
+    """RWKV6 data-dependent token-shift interpolation.
+
+    Returns dict name -> mixed input [B, L, D] for w/k/v/r/g.
+    """
+    xx = xprev - x
+    xxx = x + xx * params["mu_x"]
+    lora = jnp.tanh(xxx @ params["mix_w1"])  # [B, L, 5*ml]
+    b, l, _ = lora.shape
+    lora = lora.reshape(b, l, 5, -1)
+    offs = jnp.einsum("blfm,fmd->blfd", lora, params["mix_w2"])
+    out = {}
+    for i, nm in enumerate(_MIX_NAMES):
+        out[nm] = x + xx * (params[f"mu_{nm}"] + offs[:, :, i])
+    return out
+
+
+def _decay(params, x_w):
+    """Data-dependent per-channel decay in (0, 1)."""
+    lora = jnp.tanh(x_w @ params["decay_w1"]) @ params["decay_w2"]
+    return jnp.exp(-jnp.exp(params["decay_w0"] + lora))
+
+
+def _wkv_step(state, rkvw, u):
+    """state: [B,H,hd,hd]; r/k/v/w: [B,H,hd]; u: [H,hd]."""
+    r, k, v, w = rkvw
+    kv = k[..., :, None] * v[..., None, :]  # [B,H,hd,hd]
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    return new_state, y
+
+
+def _wkv_scan(r, k, v, w, u, state0, chunk: int):
+    """Outer scan over chunks; inner chunk sequential + rematerialized.
+
+    r/k/v/w: [B, L, H, hd]. Returns ([B, L, H, hd], final_state).
+    """
+    b, l, h, hd = r.shape
+    pad = (-l) % chunk
+    if pad:
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = (l + pad) // chunk
+
+    def inner(state, xs_chunk):
+        def step(s, xs_t):
+            return _wkv_step(s, xs_t, u)
+
+        return jax.lax.scan(step, state, xs_chunk)
+
+    inner = jax.checkpoint(inner)
+
+    def outer(state, xs_chunk):
+        return inner(state, xs_chunk)
+
+    # [L,...] time-major, then chunked: [nc, chunk, B, H, hd]
+    def tm(a):
+        a = jnp.moveaxis(a, 1, 0)
+        return a.reshape(nc, chunk, b, h, hd)
+
+    state, ys = jax.lax.scan(outer, state0, (tm(r), tm(k), tm(v), tm(w)))
+    ys = jnp.moveaxis(ys.reshape(nc * chunk, b, h, hd), 0, 1)
+    return ys[:, :l], state
+
+
+def _group_norm(params, y, eps):
+    """Per-head layernorm on [B, L, H, hd] -> [B, L, D]."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    b, l, h, hd = y.shape
+    yn = yn.reshape(b, l, h * hd)
+    return yn * params["ln_out"]["scale"] + params["ln_out"]["bias"]
+
+
+def timemix_apply(
+    params: dict,
+    x: jax.Array,  # [B, L, D]
+    cfg: ModelConfig,
+    *,
+    shift_state: jax.Array | None = None,  # [B, D]
+    wkv_state: jax.Array | None = None,  # [B, H, hd, hd]
+    chunk: int = 128,
+    policy: CIMPolicy | None = None,
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_shift_state, new_wkv_state)."""
+    b, l, d = x.shape
+    h, hd = _dims(cfg)
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    xprev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    mixed = _ddlerp(params, x, xprev)
+
+    en = policy.apply_to_attn_proj if policy else False
+    ks = jax.random.split(key, 5) if key is not None else (None,) * 5
+    heads = lambda a: a.reshape(b, l, h, hd)
+    r = heads(common.linear_apply(params["wr"], mixed["r"], policy,
+                                  cim_enabled=en, key=ks[0]))
+    k = heads(common.linear_apply(params["wk"], mixed["k"], policy,
+                                  cim_enabled=en, key=ks[1]))
+    v = heads(common.linear_apply(params["wv"], mixed["v"], policy,
+                                  cim_enabled=en, key=ks[2]))
+    g = common.linear_apply(params["wg"], mixed["g"], policy,
+                            cim_enabled=en, key=ks[3])
+    w = heads(_decay(params, mixed["w"]))
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    wkv_state = wkv_state.astype(jnp.float32)
+    ys, new_state = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), w.astype(jnp.float32),
+        params["bonus_u"].astype(jnp.float32), wkv_state, chunk,
+    )
+    y = _group_norm(params, ys, cfg.norm_eps).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    out = common.linear_apply(params["wo"], y, policy, cim_enabled=en,
+                              key=ks[4])
+    return out, x[:, -1], new_state
+
+
+def channelmix_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    shift_state: jax.Array | None = None,
+    policy: CIMPolicy | None = None,
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    b, l, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    xprev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    xx = xprev - x
+    x_k = x + xx * params["mu_k"]
+    x_r = x + xx * params["mu_r"]
+    en = policy.apply_to_mlp if policy else False
+    ks = jax.random.split(key, 3) if key is not None else (None,) * 3
+    k = common.linear_apply(params["wk"], x_k, policy, cim_enabled=en,
+                            key=ks[0])
+    k = jnp.square(jax.nn.relu(k))
+    kv = common.linear_apply(params["wv"], k, policy, cim_enabled=en,
+                             key=ks[1])
+    r = common.linear_apply(params["wr"], x_r, policy, cim_enabled=en,
+                            key=ks[2])
+    return jax.nn.sigmoid(r) * kv, x[:, -1]

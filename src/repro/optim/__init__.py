@@ -1,0 +1,27 @@
+"""Optimizer substrate: AdamW + schedules + clipping + compression."""
+
+from repro.optim.adamw import (
+    AdamWState,
+    CompressionState,
+    OptimizerConfig,
+    apply_updates,
+    clip_by_global_norm,
+    compress_decompress,
+    global_norm,
+    init_compression,
+    init_state,
+    schedule_lr,
+)
+
+__all__ = [
+    "AdamWState",
+    "CompressionState",
+    "OptimizerConfig",
+    "apply_updates",
+    "clip_by_global_norm",
+    "compress_decompress",
+    "global_norm",
+    "init_compression",
+    "init_state",
+    "schedule_lr",
+]

@@ -1,0 +1,165 @@
+"""AdamW with schedules, global-norm clipping and gradient compression.
+
+Self-contained (no optax offline). State is a pytree mirroring params,
+so the sharding rules that apply to params apply to m/v unchanged --
+optimizer state is FSDP-sharded for free.
+
+Gradient compression: int8 error-feedback quantization applied before
+the cross-pod reduction (see repro.train.trainer). Error feedback keeps
+a residual so the compression is unbiased over time (1-bit/8-bit SGD
+style); used on the 'pod' axis where ICI links are the scarce resource.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    m: Params
+    v: Params
+
+
+def init_state(params: Params, *, dtype=jnp.float32) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype),
+                         params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def schedule_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:
+        decay = jnp.ones(())
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(
+    params: Params,
+    grads: Params,
+    state: AdamWState,
+    cfg: OptimizerConfig,
+) -> tuple[Params, AdamWState, dict]:
+    """One AdamW step; returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod reduction)
+# ---------------------------------------------------------------------------
+
+
+class CompressionState(NamedTuple):
+    residual: Params  # error-feedback accumulator
+
+
+def init_compression(params: Params) -> CompressionState:
+    return CompressionState(
+        jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                     params)
+    )
+
+
+def compress_decompress(
+    grads: Params, comp: CompressionState
+) -> tuple[Params, CompressionState, dict]:
+    """Simulate int8 quantization of the gradient all-reduce payload.
+
+    g_q = dequant(quant(g + residual)); residual' = (g + residual) - g_q.
+    The *transmitted* tensor is int8 (8x less ICI traffic cross-pod);
+    the returned gradient is its dequantization, so training dynamics
+    include the compression error -- and error feedback cancels it over
+    steps.
+    """
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127)
+        deq = q * scale
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(comp.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_r = treedef.unflatten([o[1] for o in out])
+    err = sum(jnp.sum(jnp.square(r)) for r in [o[1] for o in out])
+    return new_g, CompressionState(new_r), {"compress_err_sq": err}

@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode engine + continuous batcher."""
+
+from repro.serve.engine import ContinuousBatcher, Request, ServeEngine
+
+__all__ = ["ContinuousBatcher", "Request", "ServeEngine"]

@@ -1,0 +1,19 @@
+"""Training substrate: jitted step factory + fault-tolerant driver."""
+
+from repro.train.trainer import (
+    StragglerWatchdog,
+    Trainer,
+    TrainerConfig,
+    TrainState,
+    init_train_state,
+    make_train_step,
+)
+
+__all__ = [
+    "StragglerWatchdog",
+    "Trainer",
+    "TrainerConfig",
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+]

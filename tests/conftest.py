@@ -1,0 +1,24 @@
+"""Shared fixtures. IMPORTANT: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the real (single) CPU device; only
+repro.launch.dryrun forces 512 placeholder devices, in its own process.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running integration tests"
+    )

@@ -1,0 +1,94 @@
+"""Attention-core equivalences: flash (online-softmax) vs materialized
+reference, causal + sliding-window masks, gradients, GQA grouping.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention
+
+
+def _qkv(key, B=2, S=320, H=8, KVH=4, hd=32, T=None):
+    T = T or S
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, T, KVH, hd))
+    v = jax.random.normal(ks[2], (B, T, KVH, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 64, 129])
+@pytest.mark.parametrize("block", [64, 100, 256])
+def test_flash_matches_reference(window, block):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    S = q.shape[1]
+    pos = jnp.arange(S)
+    mask = attention.causal_mask(S, S, window=window)[None, None, None]
+    ref = attention._gqa_core(q, k, v, mask)
+    fl = attention._flash_core(q, k, v, q_positions=pos, window=window,
+                               block=block)
+    np.testing.assert_allclose(np.asarray(fl), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_flash_gradients_match():
+    q, k, v = _qkv(jax.random.PRNGKey(1), S=192)
+    S = q.shape[1]
+    pos = jnp.arange(S)
+    mask = attention.causal_mask(S, S)[None, None, None]
+
+    gr = jax.grad(lambda a: jnp.sum(attention._gqa_core(a, k, v, mask)
+                                    ** 2))(q)
+    gf = jax.grad(lambda a: jnp.sum(
+        attention._flash_core(a, k, v, q_positions=pos, block=64) ** 2)
+    )(q)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gr),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_flash_mqa_and_mha_grouping():
+    # MQA (KVH=1) and MHA (KVH=H) corner cases
+    for kvh in [1, 8]:
+        q, k, v = _qkv(jax.random.PRNGKey(2), H=8, KVH=kvh, S=128)
+        pos = jnp.arange(128)
+        mask = attention.causal_mask(128, 128)[None, None, None]
+        ref = attention._gqa_core(q, k, v, mask)
+        fl = attention._flash_core(q, k, v, q_positions=pos, block=32)
+        np.testing.assert_allclose(np.asarray(fl), np.asarray(ref),
+                                   atol=5e-5, rtol=1e-4)
+
+
+def test_flash_padding_block_not_multiple():
+    q, k, v = _qkv(jax.random.PRNGKey(3), S=130)
+    pos = jnp.arange(130)
+    mask = attention.causal_mask(130, 130)[None, None, None]
+    ref = attention._gqa_core(q, k, v, mask)
+    fl = attention._flash_core(q, k, v, q_positions=pos, block=64)
+    np.testing.assert_allclose(np.asarray(fl), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_dispatcher_threshold():
+    """Short seqs use the materialized core; long use flash (both
+    correct -- just check dispatch produces identical outputs around
+    the boundary with a tiny threshold monkeypatch)."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), S=64)
+    pos = jnp.arange(64)
+    got = attention._self_attention_core(q, k, v, positions=pos,
+                                         window=0, s=64)
+    mask = attention.causal_mask(64, 64)[None, None, None]
+    ref = attention._gqa_core(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_first_token_fully_masked_rows_are_finite():
+    """Sliding window can mask every key of early... actually row 0
+    always sees itself; check no NaNs with tiny window."""
+    q, k, v = _qkv(jax.random.PRNGKey(5), S=96)
+    pos = jnp.arange(96)
+    fl = attention._flash_core(q, k, v, q_positions=pos, window=1,
+                               block=32)
+    assert np.all(np.isfinite(np.asarray(fl)))

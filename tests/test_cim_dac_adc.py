@@ -1,0 +1,252 @@
+"""Unit tests for the DAC / AMU / ADC voltage-domain models (paper III).
+
+Every published equation is asserted exactly; the in-SRAM reference
+scheme's PVT-tracking claim is tested as invariance of ADC codes to
+kappa and VDD.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc, dac, macro, quant
+from repro.core.params import PAPER_OP_8ROWS, PAPER_OP_16ROWS, CIMConfig
+
+
+class TestDAC:
+    def test_vdac_equation_all_codes(self):
+        """V_DAC = (sum 2^i X̄[i] + 1) VDD/16 = (16-X)/16 VDD (Fig. 3b)."""
+        cfg = PAPER_OP_16ROWS
+        codes = jnp.arange(16, dtype=jnp.int32)
+        v = dac.dac_voltage(codes, cfg)
+        want = (16 - codes.astype(jnp.float32)) / 16.0 * cfg.vdd
+        np.testing.assert_allclose(np.asarray(v), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_cap_grouping_binary_weighted(self):
+        """8/4/2/1 caps per input bit + 1 always-precharged (Fig. 3a)."""
+        cfg = PAPER_OP_16ROWS
+        for code in range(16):
+            states = np.asarray(
+                dac.cap_states(jnp.asarray(code, jnp.int32), cfg)
+            )
+            n_discharged = int(np.sum(states == 0.0))
+            assert n_discharged == code  # X discharged caps encode X
+            assert states[15] == 1.0  # cap 15 always precharged
+
+    def test_dac_code8_half_vdd(self):
+        """Input '1000' -> half-VDD (the paper's worked example)."""
+        cfg = PAPER_OP_16ROWS
+        v = float(dac.dac_voltage(jnp.asarray(8, jnp.int32), cfg))
+        assert v == pytest.approx(cfg.vdd / 2)
+
+    def test_dac_value_roundtrip(self):
+        cfg = PAPER_OP_16ROWS
+        codes = jnp.arange(16, dtype=jnp.int32)
+        v = dac.dac_voltage(codes, cfg)
+        np.testing.assert_allclose(
+            np.asarray(dac.dac_value(v, cfg)),
+            np.arange(16, dtype=np.float32),
+            atol=1e-5,
+        )
+
+    def test_multiply_truth_table(self):
+        """w=1 keeps V_DAC; w=0 pulls CBL to VDD (Fig. 4)."""
+        cfg = PAPER_OP_16ROWS
+        v_dac = dac.dac_voltage(jnp.arange(16, dtype=jnp.int32), cfg)
+        keep = dac.multiply_bitcell(v_dac, jnp.ones(16), cfg)
+        zero = dac.multiply_bitcell(v_dac, jnp.zeros(16), cfg)
+        np.testing.assert_allclose(np.asarray(keep), np.asarray(v_dac))
+        np.testing.assert_allclose(np.asarray(zero), cfg.vdd)
+
+    def test_abl_accumulation_equation(self):
+        """V_ABL = (sum C V_j + C_ABL VDD)/(16C + C_ABL) (Fig. 5b)."""
+        cfg = PAPER_OP_16ROWS.replace(c_abl_ratio=1.7)
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 16, size=16)
+        v_cbl = dac.dac_voltage(jnp.asarray(x, jnp.int32), cfg)
+        v_abl = dac.accumulate_abl(v_cbl, cfg)
+        pmac = float(np.sum(x))
+        want = dac.abl_voltage_from_pmac(jnp.asarray(pmac), cfg)
+        assert float(v_abl) == pytest.approx(float(want), rel=1e-6)
+
+    def test_241_pmac_levels(self):
+        cfg = PAPER_OP_16ROWS
+        assert cfg.pmac_levels == 241
+        assert cfg.q_full == 8
+        assert cfg.threshold == 128
+        assert cfg.adc_step == 8.0
+
+    def test_8row_operating_point(self):
+        cfg = PAPER_OP_8ROWS
+        assert cfg.pmac_max == 120
+        assert cfg.q_full == 7
+        assert cfg.threshold == 64
+        assert cfg.adc_step == 4.0
+
+
+class TestADC:
+    def test_reference_voltages_equation(self):
+        """V_REF[N] = (N/2 + (16-N)) VDD/16 (Fig. 6a)."""
+        cfg = PAPER_OP_16ROWS
+        n = jnp.arange(16, dtype=jnp.float32)
+        want = (n / 2 + (16 - n)) * cfg.vdd / 16
+        np.testing.assert_allclose(
+            np.asarray(adc.reference_voltages(cfg)), np.asarray(want),
+            rtol=1e-6,
+        )
+
+    def test_coarse_fine_equals_flat_flash(self):
+        """Fig. 6(b): 1+3-bit coarse-fine == 15-comparator flash."""
+        cfg = PAPER_OP_16ROWS
+        pmac = jnp.arange(cfg.pmac_levels, dtype=jnp.float32)
+        v = dac.abl_voltage_from_pmac(pmac, cfg)
+        cf = adc.adc_read_voltage(v, cfg)
+        flat = adc.adc_flat_flash(v, cfg)
+        np.testing.assert_array_equal(np.asarray(cf), np.asarray(flat))
+
+    def test_voltage_adc_matches_integer_transfer(self):
+        cfg = PAPER_OP_16ROWS
+        pmac = jnp.arange(cfg.pmac_levels, dtype=jnp.float32)
+        v = dac.abl_voltage_from_pmac(pmac, cfg)
+        v_codes = adc.adc_read_voltage(v, cfg)
+        i_codes = adc.adc_transfer_int(pmac, cfg)
+        np.testing.assert_array_equal(np.asarray(v_codes),
+                                      np.asarray(i_codes))
+
+    def test_cutoff_clipping(self):
+        """pMAC above threshold saturates to the top code (Sec. IV)."""
+        cfg = PAPER_OP_16ROWS
+        top = cfg.adc_codes - 1
+        for pmac in [128, 129, 200, 240]:
+            code = int(adc.adc_transfer_int(jnp.asarray(float(pmac)), cfg))
+            assert code == top
+
+    def test_floor_semantics(self):
+        cfg = PAPER_OP_16ROWS
+        for pmac, want in [(0, 0), (7, 0), (8, 1), (15, 1), (63, 7),
+                           (64, 8), (127, 15)]:
+            code = int(adc.adc_transfer_int(jnp.asarray(float(pmac)), cfg))
+            assert code == want, (pmac, code, want)
+
+    def test_monotonic_nondecreasing(self):
+        cfg = PAPER_OP_16ROWS
+        pmac = jnp.arange(cfg.pmac_levels, dtype=jnp.float32)
+        codes = np.asarray(adc.adc_transfer_int(pmac, cfg))
+        assert np.all(np.diff(codes) >= 0)
+
+    def test_kappa_invariance(self):
+        """In-SRAM refs track C_ABL/C_CBL: codes independent of kappa."""
+        pmac = jnp.arange(241, dtype=jnp.float32)
+        base = None
+        for kappa in [0.0, 0.5, 2.0, 7.3]:
+            cfg = PAPER_OP_16ROWS.replace(c_abl_ratio=kappa)
+            v = dac.abl_voltage_from_pmac(pmac, cfg)
+            codes = np.asarray(adc.adc_read_voltage(v, cfg))
+            if base is None:
+                base = codes
+            np.testing.assert_array_equal(codes, base)
+
+    def test_vdd_invariance(self):
+        """ADC decisions depend only on charge ratios -> VDD-independent."""
+        pmac = jnp.arange(241, dtype=jnp.float32)
+        base = None
+        for vdd in [0.6, 0.9, 1.2]:
+            cfg = PAPER_OP_16ROWS.replace(vdd=vdd)
+            v = dac.abl_voltage_from_pmac(pmac, cfg)
+            codes = np.asarray(adc.adc_read_voltage(v, cfg))
+            if base is None:
+                base = codes
+            np.testing.assert_array_equal(codes, base)
+
+    def test_reference_input_code_is_step(self):
+        assert adc.reference_input_code(PAPER_OP_16ROWS) == 8
+        assert adc.reference_input_code(PAPER_OP_8ROWS) == 4
+
+    def test_comparator_count(self):
+        """8 comparators: 1 coarse + 7 fine (the paper's cost claim)."""
+        cfg = PAPER_OP_16ROWS
+        half = cfg.adc_codes // 2
+        n_fine_low = half - 1   # REF[1..7]
+        n_fine_high = cfg.adc_codes - half - 1  # REF[9..15]
+        assert 1 + max(n_fine_low, n_fine_high) == 8
+
+
+class TestMacro:
+    @pytest.mark.parametrize("cfg", [PAPER_OP_16ROWS, PAPER_OP_8ROWS],
+                             ids=["16rows", "8rows"])
+    def test_voltage_macro_equals_digital(self, cfg):
+        rng = np.random.default_rng(42)
+        for _ in range(20):
+            x = jnp.asarray(rng.integers(0, 16, 16), jnp.int32)
+            w = jnp.asarray(rng.integers(-128, 128, (16, 8)), jnp.int32)
+            out = macro.macro_op(x, w, cfg)
+            ref = macro.macro_op_reference_digital(x, w, cfg)
+            np.testing.assert_allclose(np.asarray(out.outputs),
+                                       np.asarray(ref), atol=1e-4)
+
+    def test_inactive_rows_masked(self):
+        cfg = PAPER_OP_8ROWS
+        x = jnp.full((16,), 15, jnp.int32)
+        w = jnp.ones((16, 8), jnp.int32)
+        out = macro.macro_op(x, w, cfg)
+        # only 8 active rows: ideal pMAC = 8*15 = 120 per LSB plane
+        assert int(out.pmac_ideal[0, 0]) == 120
+
+    def test_noise_injection_is_keyed_and_bounded(self):
+        cfg = PAPER_OP_16ROWS.replace(noisy=True, vdd=0.6)
+        x = jnp.asarray(np.full(16, 8), jnp.int32)
+        w = jnp.ones((16, 8), jnp.int32)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        o1 = macro.macro_op(x, w, cfg, key=k1)
+        o2 = macro.macro_op(x, w, cfg, key=k1)
+        o3 = macro.macro_op(x, w, cfg, key=k2)
+        np.testing.assert_array_equal(np.asarray(o1.adc_codes),
+                                      np.asarray(o2.adc_codes))
+        # different key may flip codes, but at most by 1 LSB at this sigma
+        assert np.max(np.abs(np.asarray(o1.adc_codes, np.int64)
+                             - np.asarray(o3.adc_codes, np.int64))) <= 1
+
+
+class TestQuant:
+    def test_bitslice_roundtrip(self):
+        rng = np.random.default_rng(0)
+        codes = jnp.asarray(rng.integers(-128, 128, (32, 7)), jnp.int32)
+        planes = quant.bitslice_weights(codes, 8)
+        back = quant.unslice_weights(planes, 8)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+        assert planes.shape == (8, 32, 7)
+        assert set(np.unique(np.asarray(planes))) <= {0, 1}
+
+    def test_plane_signs_twos_complement(self):
+        signs = np.asarray(quant.plane_signs(8))
+        np.testing.assert_array_equal(
+            signs, [1, 2, 4, 8, 16, 32, 64, -128]
+        )
+
+    def test_act_quant_bounds_and_roundtrip(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+        q = quant.quantize_acts(x, 4)
+        codes = np.asarray(q.codes)
+        assert codes.min() >= 0 and codes.max() <= 15
+        err = np.abs(np.asarray(quant.dequantize_acts(q)) - np.asarray(x))
+        assert err.max() <= float(np.asarray(q.scale).max()) * 0.5 + 1e-6
+
+    def test_weight_quant_symmetric_per_channel(self):
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(rng.normal(size=(32, 8)) * np.arange(1, 9),
+                        jnp.float32)
+        q = quant.quantize_weights(w, 8)
+        assert q.scale.shape == (1, 8)
+        codes = np.asarray(q.codes)
+        assert codes.min() >= -128 and codes.max() <= 127
+        err = np.abs(np.asarray(quant.dequantize_weights(q)) - np.asarray(w))
+        assert np.all(err <= np.asarray(q.scale)[0] * 0.5 + 1e-6)
+
+    def test_unsigned_symmetric_posthoc_relu(self):
+        x = jnp.asarray(np.random.default_rng(3).uniform(0, 5, (16, 16)),
+                        jnp.float32)
+        q = quant.quantize_acts(x, 4, symmetric=True)
+        assert int(np.asarray(q.zero_point).max()) == 0

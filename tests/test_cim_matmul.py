@@ -1,0 +1,179 @@
+"""GPQ matmul semantics: behavioral model, exact mode, STE, sharding
+locality (the invariant that makes the macro TP-friendly).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matmul, quant
+from repro.core.params import PAPER_OP_8ROWS, PAPER_OP_16ROWS, CIMConfig
+from repro.kernels.ref import cim_matmul_ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand_codes(m, k, n, act_bits=4, weight_bits=8):
+    x = jnp.asarray(RNG.integers(0, 1 << act_bits, (m, k)), jnp.int32)
+    lo, hi = -(1 << (weight_bits - 1)), 1 << (weight_bits - 1)
+    w = jnp.asarray(RNG.integers(lo, hi, (k, n)), jnp.int32)
+    return x, w
+
+
+class TestIntegerSemantics:
+    @pytest.mark.parametrize("cfg", [PAPER_OP_16ROWS, PAPER_OP_8ROWS],
+                             ids=["16rows", "8rows"])
+    @pytest.mark.parametrize("mkn", [(4, 16, 8), (8, 64, 8), (5, 70, 3)])
+    def test_scan_matches_vectorized_ref(self, cfg, mkn):
+        x, w = rand_codes(*mkn)
+        got = matmul.cim_matmul_int(x, w, cfg)
+        want = cim_matmul_ref(x, w, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-3)
+
+    def test_ideal_adc_equals_exact(self):
+        """No clip + full resolution + no noise => plain int matmul.
+
+        This is the escape-hatch identity the 'cim-exact' mode relies on
+        (paper Fig. 5b: the macro tracks the ideal equation)."""
+        cfg = PAPER_OP_16ROWS.replace(cutoff=0.0, adc_bits=8)
+        x, w = rand_codes(8, 128, 8)
+        got = matmul.cim_matmul_int(x, w, cfg)
+        want = matmul.cim_matmul_exact_int(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_group_locality_tp_invariance(self):
+        """Splitting K into group-aligned shards and summing the ADC'd
+        partials equals the unsharded result -- the property that makes
+        tensor-parallel reduction exact (digital partial sums commute
+        with per-group ADC)."""
+        cfg = PAPER_OP_16ROWS
+        x, w = rand_codes(6, 96, 5)
+        full = matmul.cim_matmul_int(x, w, cfg)
+        cut = 48  # multiple of rows_active
+        part = (matmul.cim_matmul_int(x[:, :cut], w[:cut], cfg)
+                + matmul.cim_matmul_int(x[:, cut:], w[cut:], cfg))
+        np.testing.assert_allclose(np.asarray(full), np.asarray(part),
+                                   atol=1e-3)
+
+    def test_k_padding_is_neutral(self):
+        """K not a multiple of rows: zero-padded rows contribute 0."""
+        cfg = PAPER_OP_16ROWS
+        x, w = rand_codes(4, 50, 4)
+        got = matmul.cim_matmul_int(x, w, cfg)
+        x_pad = jnp.pad(x, ((0, 0), (0, 14)))
+        w_pad = jnp.pad(w, ((0, 14), (0, 0)))
+        want = matmul.cim_matmul_int(x_pad, w_pad, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_clipping_reduces_magnitude_only(self):
+        """ADC saturation biases each plane's pMAC towards the cutoff."""
+        cfg = PAPER_OP_16ROWS
+        x = jnp.full((1, 16), 15, jnp.int32)
+        w = jnp.full((16, 1), 127, jnp.int32)  # all planes 0..6 set
+        got = float(matmul.cim_matmul_int(x, w, cfg)[0, 0])
+        exact = float(matmul.cim_matmul_exact_int(x, w)[0, 0])
+        # every positive plane pMAC = 240 -> clipped to code 15 (=120)
+        assert got == pytest.approx((1 + 2 + 4 + 8 + 16 + 32 + 64) * 120)
+        assert got < exact
+
+    def test_noise_determinism_and_effect(self):
+        cfg = PAPER_OP_16ROWS.replace(noisy=True)
+        x, w = rand_codes(4, 64, 4)
+        k = jax.random.PRNGKey(3)
+        a = matmul.cim_matmul_int(x, w, cfg, key=k)
+        b = matmul.cim_matmul_int(x, w, cfg, key=k)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        clean = matmul.cim_matmul_int(x, w, cfg.replace(noisy=False))
+        # bounded noise: each (group, plane) can flip at most a few
+        # codes; worst case one step per plane per group -> G * 255 * Δ
+        n_groups = 64 // cfg.rows_active
+        assert np.max(np.abs(np.asarray(a) - np.asarray(clean))) <= \
+            cfg.adc_step * 255 * n_groups
+
+
+class TestEndToEnd:
+    def test_fp_mode_is_plain_matmul(self):
+        x = jnp.asarray(RNG.normal(size=(4, 8)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(8, 3)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(matmul.cim_matmul(x, w, mode="fp")),
+            np.asarray(x @ w), rtol=1e-6)
+
+    @pytest.mark.parametrize("mode,bound", [
+        # cim-exact: only the 4b/8b grids -> ~10% on random data.
+        ("cim-exact", 0.25),
+        # full ADC path: the per-16-row-group 4-bit readout is the
+        # dominant error on zero-mean random data (~0.5-0.7 rel) --
+        # the very noise the paper co-designs against; networks absorb
+        # it (see benchmarks/table1_accuracy.py).
+        ("cim", 0.9),
+        ("cim-kernel", 0.9),
+    ])
+    def test_quantized_modes_approximate_fp(self, mode, bound):
+        cfg = PAPER_OP_16ROWS
+        x = jnp.asarray(RNG.normal(size=(8, 64)).clip(-3, 3), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(64, 8)) * 0.1, jnp.float32)
+        y_fp = np.asarray(x @ w)
+        y = np.asarray(matmul.cim_matmul(x, w, cfg, mode=mode))
+        rel = np.linalg.norm(y - y_fp) / np.linalg.norm(y_fp)
+        assert rel < bound, (mode, rel)
+
+    def test_exact_mode_equals_dequantized_int_matmul(self):
+        """Zero-point correction is exact: the signed-activation
+        extension loses nothing beyond the quantization grids."""
+        cfg = PAPER_OP_16ROWS
+        x = jnp.asarray(RNG.normal(size=(4, 32)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(32, 4)), jnp.float32)
+        qa = quant.quantize_acts(x, 4)
+        qw = quant.quantize_weights(w, 8)
+        want = (np.asarray(qa.scale)
+                * (np.asarray(qa.codes) - np.asarray(qa.zero_point))
+                ) @ (np.asarray(qw.scale) * np.asarray(qw.codes))
+        got = np.asarray(
+            matmul.cim_matmul(x, w, cfg, mode="cim-exact", ste=False)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_ste_gradients_flow(self):
+        cfg = PAPER_OP_16ROWS
+
+        def loss(x, w):
+            y = matmul.cim_matmul(x, w, cfg, mode="cim")
+            return jnp.sum(jnp.square(y))
+
+        x = jnp.asarray(RNG.normal(size=(4, 32)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(32, 4)) * 0.1, jnp.float32)
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+        assert np.all(np.isfinite(np.asarray(gx)))
+        assert np.all(np.isfinite(np.asarray(gw)))
+        assert float(jnp.linalg.norm(gx)) > 0
+        assert float(jnp.linalg.norm(gw)) > 0
+
+    def test_ste_gradient_matches_linear_map(self):
+        """Backward is d(x@w): the straight-through definition."""
+        cfg = PAPER_OP_16ROWS
+        x = jnp.asarray(RNG.normal(size=(3, 32)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(32, 2)) * 0.1, jnp.float32)
+        g = jnp.asarray(RNG.normal(size=(3, 2)), jnp.float32)
+
+        def f(x, w):
+            return jnp.vdot(g, matmul.cim_matmul(x, w, cfg, mode="cim"))
+
+        gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(g @ w.T),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ g),
+                                   rtol=1e-5)
+
+    def test_batched_inputs_reshape(self):
+        cfg = PAPER_OP_16ROWS
+        x = jnp.asarray(RNG.normal(size=(2, 5, 32)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(32, 4)) * 0.1, jnp.float32)
+        y = matmul.cim_matmul(x, w, cfg, mode="cim-exact")
+        assert y.shape == (2, 5, 4)
+        flat = matmul.cim_matmul(x.reshape(10, 32), w, cfg,
+                                 mode="cim-exact")
+        np.testing.assert_allclose(np.asarray(y).reshape(10, 4),
+                                   np.asarray(flat), rtol=1e-5)

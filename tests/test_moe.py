@@ -1,0 +1,163 @@
+"""MoE: router, grouped capacity dispatch vs exact references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, get_config
+from repro.models import moe
+
+RNG = np.random.default_rng(5)
+
+
+def _mini_params(key, d, mo: MoEConfig):
+    spec_cfg = get_config("granite_moe_1b", smoke=True)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": {"w": 0.2 * jax.random.normal(ks[0], (d, mo.n_experts))},
+        "gate": 0.2 * jax.random.normal(ks[1], (mo.n_experts, d, mo.d_expert)),
+        "up": 0.2 * jax.random.normal(ks[2], (mo.n_experts, d, mo.d_expert)),
+        "down": 0.2 * jax.random.normal(ks[3], (mo.n_experts, mo.d_expert, d)),
+    }
+    return params
+
+
+def _dense_reference(params, x2, top_p, top_e, mo):
+    """Exact dense evaluation of the routed mixture (no capacity)."""
+    t, d = x2.shape
+    out = np.zeros((t, d), np.float32)
+    xn = np.asarray(x2, np.float32)
+    for e in range(mo.n_experts):
+        gate = xn @ np.asarray(params["gate"][e])
+        up = xn @ np.asarray(params["up"][e])
+        h = gate / (1 + np.exp(-gate)) * up
+        y = h @ np.asarray(params["down"][e])
+        w_e = np.sum(np.where(np.asarray(top_e) == e,
+                              np.asarray(top_p, np.float32), 0.0), -1)
+        out += w_e[:, None] * y
+    return out
+
+
+class TestRouter:
+    def test_topk_normalized(self):
+        mo = MoEConfig(n_experts=8, top_k=2, d_expert=16)
+        params = _mini_params(jax.random.PRNGKey(0), 32, mo)
+        x2 = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+        top_p, top_e, metrics = moe._router(params, x2, mo)
+        np.testing.assert_allclose(np.asarray(jnp.sum(top_p, -1)), 1.0,
+                                   rtol=1e-5)
+        assert np.asarray(top_e).max() < 8
+        assert float(metrics.aux_loss) > 0
+
+    def test_aux_loss_uniform_router_is_one(self):
+        """Perfectly balanced router -> Switch aux loss == 1."""
+        mo = MoEConfig(n_experts=4, top_k=1, d_expert=8)
+        params = _mini_params(jax.random.PRNGKey(0), 16, mo)
+        params["router"]["w"] = jnp.zeros((16, 4))
+        x2 = jnp.asarray(RNG.normal(size=(400, 16)), jnp.float32)
+        _, _, metrics = moe._router(params, x2, mo)
+        # ties broken by index -> f concentrated; use probs part only:
+        # P_e uniform = 1/4; aux = 4 * sum f_e/4 = 1 regardless of f.
+        assert float(metrics.aux_loss) == pytest.approx(1.0, rel=1e-5)
+
+
+class TestGroupedDispatch:
+    def test_matches_dense_when_capacity_ample(self):
+        """cf high enough -> no drops -> grouped == exact dense mixture."""
+        mo = MoEConfig(n_experts=4, top_k=2, d_expert=16,
+                       capacity_factor=8.0, group_size=32)
+        d = 24
+        params = _mini_params(jax.random.PRNGKey(1), d, mo)
+        x2 = jnp.asarray(RNG.normal(size=(96, d)), jnp.float32)
+        top_p, top_e, _ = moe._router(params, x2, mo)
+        got = np.asarray(
+            moe._dispatch_grouped(params, x2, top_p, top_e, mo,
+                                  jnp.float32)
+        )
+        want = _dense_reference(params, x2, top_p, top_e, mo)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_matches_ragged_when_capacity_ample(self):
+        mo_g = MoEConfig(n_experts=4, top_k=2, d_expert=16,
+                         capacity_factor=8.0, group_size=64,
+                         dispatch="grouped")
+        mo_r = mo_g.__class__(**{**mo_g.__dict__, "dispatch": "ragged"})
+        d = 16
+        params = _mini_params(jax.random.PRNGKey(2), d, mo_g)
+        x2 = jnp.asarray(RNG.normal(size=(64, d)), jnp.float32)
+        top_p, top_e, _ = moe._router(params, x2, mo_g)
+        grouped = np.asarray(moe._dispatch_grouped(
+            params, x2, top_p, top_e, mo_g, jnp.float32))
+        # ragged path via moe_apply internals
+        flat_e = top_e.reshape(-1)
+        order = jnp.argsort(flat_e)
+        token_of = order // mo_r.top_k
+        xs = jnp.take(x2, token_of, axis=0)
+        group_sizes = jnp.zeros((4,), jnp.int32).at[flat_e].add(1)
+        ys = moe._experts_ragged(params, xs, group_sizes, jnp.float32)
+        p_sorted = jnp.take(top_p.reshape(-1), order)
+        ragged = np.asarray(
+            jnp.zeros_like(x2).at[token_of].add(ys * p_sorted[:, None])
+        )
+        np.testing.assert_allclose(grouped, ragged, rtol=2e-4, atol=2e-4)
+
+    def test_capacity_drops_reduce_output_norm(self):
+        """Tight capacity drops tokens; output shrinks, never explodes."""
+        d = 16
+        mo_hi = MoEConfig(n_experts=4, top_k=2, d_expert=16,
+                          capacity_factor=8.0, group_size=32)
+        mo_lo = MoEConfig(n_experts=4, top_k=2, d_expert=16,
+                          capacity_factor=0.5, group_size=32)
+        params = _mini_params(jax.random.PRNGKey(3), d, mo_hi)
+        x2 = jnp.asarray(RNG.normal(size=(64, d)), jnp.float32)
+        top_p, top_e, _ = moe._router(params, x2, mo_hi)
+        y_hi = np.asarray(moe._dispatch_grouped(params, x2, top_p, top_e,
+                                                mo_hi, jnp.float32))
+        y_lo = np.asarray(moe._dispatch_grouped(params, x2, top_p, top_e,
+                                                mo_lo, jnp.float32))
+        assert np.linalg.norm(y_lo) <= np.linalg.norm(y_hi) + 1e-5
+
+    def test_first_choice_priority_under_drops(self):
+        """With C=k tokens per expert, first choices win slots."""
+        mo = MoEConfig(n_experts=2, top_k=1, d_expert=4,
+                       capacity_factor=1.0, group_size=8)
+        d = 8
+        params = _mini_params(jax.random.PRNGKey(4), d, mo)
+        x2 = jnp.asarray(RNG.normal(size=(8, d)), jnp.float32)
+        # route everyone to expert 0: capacity = 8*1*1/2 = 4 -> 4 kept
+        top_e = jnp.zeros((8, 1), jnp.int32)
+        top_p = jnp.ones((8, 1), jnp.float32)
+        y = np.asarray(moe._dispatch_grouped(params, x2, top_p, top_e, mo,
+                                             jnp.float32))
+        # first 4 tokens kept (nonzero rows), rest dropped (zero rows)
+        norms = np.linalg.norm(y, axis=-1)
+        assert np.all(norms[:4] > 1e-6)
+        np.testing.assert_allclose(norms[4:], 0.0, atol=1e-6)
+
+
+class TestMoEApply:
+    @pytest.mark.parametrize("arch", ["qwen2_moe_a2_7b", "granite_moe_1b"])
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch, smoke=True)
+        key = jax.random.PRNGKey(0)
+        from repro.models import common, transformer
+        spec = moe.moe_spec(cfg)
+        params = common.init_params(key, spec)
+        x = jax.random.normal(key, (2, 16, cfg.d_model))
+        y, metrics = moe.moe_apply(params, x, cfg)
+        assert y.shape == x.shape
+        assert np.all(np.isfinite(np.asarray(y)))
+        assert np.isfinite(float(metrics.aux_loss))
+
+    def test_shared_expert_contributes(self):
+        cfg = get_config("qwen2_moe_a2_7b", smoke=True)
+        from repro.models import common
+        key = jax.random.PRNGKey(0)
+        params = common.init_params(key, moe.moe_spec(cfg))
+        x = jax.random.normal(key, (1, 8, cfg.d_model))
+        y_full, _ = moe.moe_apply(params, x, cfg)
+        params2 = dict(params)
+        params2["shared"] = jax.tree.map(jnp.zeros_like, params["shared"])
+        y_no_shared, _ = moe.moe_apply(params2, x, cfg)
+        assert float(jnp.max(jnp.abs(y_full - y_no_shared))) > 1e-6

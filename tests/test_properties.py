@@ -1,0 +1,130 @@
+"""Hypothesis property tests for the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adc, dac, matmul, quant
+from repro.core.params import PAPER_OP_16ROWS, CIMConfig
+from repro.kernels.ref import cim_matmul_ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    codes=st.lists(st.integers(0, 15), min_size=1, max_size=32),
+    vdd=st.sampled_from([0.6, 0.9, 1.2]),
+)
+@settings(**_SETTINGS)
+def test_dac_voltage_equation_property(codes, vdd):
+    cfg = PAPER_OP_16ROWS.replace(vdd=vdd)
+    x = jnp.asarray(codes, jnp.int32)
+    v = np.asarray(dac.dac_voltage(x, cfg))
+    want = (16 - np.asarray(codes)) / 16.0 * vdd
+    np.testing.assert_allclose(v, want, rtol=1e-6)
+
+
+@given(
+    rows=st.sampled_from([4, 8, 16]),
+    cutoff=st.sampled_from([0.0, 0.25, 0.5, 0.75]),
+    adc_bits=st.integers(2, 6),
+)
+@settings(**_SETTINGS)
+def test_adc_transfer_monotone_and_bounded(rows, cutoff, adc_bits):
+    cfg = CIMConfig(rows_active=rows, cutoff=cutoff, adc_bits=adc_bits)
+    pmac = jnp.arange(cfg.pmac_levels, dtype=jnp.float32)
+    codes = np.asarray(adc.adc_transfer_int(pmac, cfg))
+    assert np.all(np.diff(codes) >= 0)          # monotone
+    assert codes.min() >= 0
+    assert codes.max() <= cfg.adc_codes - 1     # bounded
+    # dequantization never exceeds the clip threshold
+    deq = np.asarray(adc.adc_dequant(jnp.asarray(codes), cfg))
+    assert deq.max() <= cfg.threshold
+
+
+@given(
+    data=st.data(),
+    bits=st.sampled_from([2, 4, 6, 8]),
+)
+@settings(**_SETTINGS)
+def test_bitslice_roundtrip_property(data, bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    vals = data.draw(
+        st.lists(st.integers(lo, hi), min_size=1, max_size=64)
+    )
+    codes = jnp.asarray(vals, jnp.int32)
+    back = quant.unslice_weights(quant.bitslice_weights(codes, bits), bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(vals))
+
+
+@given(
+    m=st.integers(1, 6),
+    k_groups=st.integers(1, 4),
+    n=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**_SETTINGS)
+def test_ref_equals_scan_property(m, k_groups, n, seed):
+    cfg = PAPER_OP_16ROWS
+    k = k_groups * cfg.rows_active
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(matmul.cim_matmul_int(x, w, cfg)),
+        np.asarray(cim_matmul_ref(x, w, cfg)),
+        atol=1e-3,
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1), cut_groups=st.integers(1, 3))
+@settings(**_SETTINGS)
+def test_group_locality_property(seed, cut_groups):
+    """sum of shard-local GPQ matmuls == unsharded GPQ matmul, for any
+    group-aligned K split (TP/EP exactness invariant)."""
+    cfg = PAPER_OP_16ROWS
+    rng = np.random.default_rng(seed)
+    k = 4 * cfg.rows_active
+    cut = cut_groups * cfg.rows_active
+    x = jnp.asarray(rng.integers(0, 16, (3, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (k, 2)), jnp.int32)
+    full = matmul.cim_matmul_int(x, w, cfg)
+    part = (matmul.cim_matmul_int(x[:, :cut], w[:cut], cfg)
+            + matmul.cim_matmul_int(x[:, cut:], w[cut:], cfg))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(part),
+                               atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_quantize_acts_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 8)) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    q = quant.quantize_acts(x, 4)
+    err = np.abs(np.asarray(quant.dequantize_acts(q)) - np.asarray(x))
+    assert err.max() <= float(np.asarray(q.scale).max()) * 0.5 + 1e-5
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_cim_error_bounded_by_quant_grid(seed):
+    """End-to-end 'cim-exact' error vs fp is bounded by the two grids."""
+    rng = np.random.default_rng(seed)
+    cfg = PAPER_OP_16ROWS
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 3)) * 0.2, jnp.float32)
+    y = np.asarray(matmul.cim_matmul(x, w, cfg, mode="cim-exact",
+                                     ste=False))
+    y_fp = np.asarray(x @ w)
+    qa = quant.quantize_acts(x.reshape(-1, 32), 4)
+    qw = quant.quantize_weights(w, 8)
+    k = 32
+    # |err| <= K * (sx/2 * |w|max + sw/2 * |x|max + sx*sw/4)
+    sx = float(np.asarray(qa.scale).max())
+    sw = float(np.max(np.asarray(qw.scale)))
+    bound = k * (0.5 * sx * float(jnp.max(jnp.abs(w)))
+                 + 0.5 * sw * float(jnp.max(jnp.abs(x)))
+                 + 0.25 * sx * sw) + 1e-4
+    assert np.max(np.abs(y - y_fp)) <= bound

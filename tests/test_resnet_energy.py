@@ -1,0 +1,120 @@
+"""ResNet-20 (the paper's own network) + analytical energy model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CIMPolicy
+from repro.core import energy
+from repro.core.params import PAPER_OP_8ROWS, PAPER_OP_16ROWS, CIMConfig
+from repro.models import resnet
+
+
+class TestResNet:
+    def _setup(self, mode="fp"):
+        cfg = resnet.ResNetConfig(
+            widths=(8, 16), blocks_per_stage=1,
+            cim=CIMPolicy(mode=mode, cim=PAPER_OP_16ROWS,
+                          act_symmetric=True))
+        key = jax.random.PRNGKey(0)
+        params, bn = resnet.init(key, cfg)
+        x = 0.5 * jax.random.normal(key, (4, 32, 32, 3))
+        return cfg, params, bn, x
+
+    def test_forward_shapes(self):
+        cfg, params, bn, x = self._setup()
+        logits, new_bn = resnet.forward(params, bn, x, cfg, train=True)
+        assert logits.shape == (4, cfg.n_classes)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_bn_state_updates_in_train_only(self):
+        cfg, params, bn, x = self._setup()
+        _, bn_train = resnet.forward(params, bn, x, cfg, train=True)
+        _, bn_eval = resnet.forward(params, bn, x, cfg, train=False)
+        d_train = sum(
+            float(jnp.sum(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(bn), jax.tree.leaves(bn_train)))
+        d_eval = sum(
+            float(jnp.sum(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(bn), jax.tree.leaves(bn_eval)))
+        assert d_train > 0
+        assert d_eval == 0
+
+    @pytest.mark.parametrize("mode,bound", [("cim-exact", 0.35),
+                                            ("cim", 1.0)])
+    def test_cim_eval_close_to_fp(self, mode, bound):
+        """Logit perturbation bounded; accuracy-level behaviour is
+        covered by benchmarks/table1 (the tiny 8/16-width net here has
+        few channels to average the per-group ADC noise over)."""
+        cfg, params, bn, x = self._setup()
+        logits_fp, _ = resnet.forward(params, bn, x, cfg, train=False)
+        cfg_cim = resnet.ResNetConfig(
+            widths=(8, 16), blocks_per_stage=1,
+            cim=CIMPolicy(mode=mode, cim=PAPER_OP_16ROWS,
+                          act_symmetric=True, act_clip_pct=0.995))
+        logits_cim, _ = resnet.forward(params, bn, x, cfg_cim,
+                                       train=False)
+        rel = (np.linalg.norm(np.asarray(logits_cim - logits_fp))
+               / (np.linalg.norm(np.asarray(logits_fp)) + 1e-9))
+        assert rel < bound, rel
+        assert np.all(np.isfinite(np.asarray(logits_cim)))
+
+    def test_conv_as_im2col_matches_lax_conv(self):
+        """The im2col patch/weight layout used by the CIM conv path
+        reproduces lax.conv exactly in fp math (validates the feature
+        reordering in resnet._conv)."""
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (2, 8, 8, 3))
+        w = jax.random.normal(key, (3, 3, 3, 5)) * 0.2
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (3, 3), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        b, ho, wo, pf = patches.shape
+        wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(pf, 5)
+        got = (patches.reshape(-1, pf) @ wmat).reshape(b, ho, wo, 5)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+
+class TestEnergyModel:
+    def test_reproduces_published_topsw(self):
+        """Fig. 10(a)/Table II anchors within fit tolerance."""
+        for vdd, want in [(0.6, 50.07), (0.9, 22.19), (1.2, 9.77)]:
+            rep = energy.macro_report(CIMConfig(vdd=vdd))
+            assert rep.tops_per_w == pytest.approx(want, rel=0.06), vdd
+
+    def test_frequency_endpoints(self):
+        assert energy.frequency_mhz(0.6) == pytest.approx(76.9, rel=1e-6)
+        assert energy.frequency_mhz(1.2) == pytest.approx(435.0, rel=1e-6)
+
+    def test_cycle_time_at_0p9(self):
+        """Table II: 4.4 ns cycle at 0.9 V."""
+        rep = energy.macro_report(CIMConfig(vdd=0.9))
+        assert rep.cycle_ns == pytest.approx(4.4, rel=0.15)
+
+    def test_adc_energy_saving_calibration(self):
+        conv, prop, saving = energy.adc_energy_comparison()
+        assert saving == pytest.approx(0.439)
+        assert prop == pytest.approx(conv * (1 - 0.439))
+        assert prop > 8  # >= 8 comparator units + nonneg reference cost
+
+    def test_macro_geometry(self):
+        cfg = CIMConfig()
+        assert cfg.n_weight_cols == 64
+        assert cfg.n_outputs == 8
+        assert cfg.macs_per_cycle == 128  # paper: 128 MACs/cycle
+
+    def test_layer_energy_tiling(self):
+        cfg = CIMConfig(vdd=0.6)
+        e, cycles = energy.layer_energy_j(cfg, m=1, k=16, n=8)
+        assert cycles == 1  # one macro op: 16 rows x 8 outputs
+        e2, cycles2 = energy.layer_energy_j(cfg, m=2, k=32, n=16)
+        assert cycles2 == 8  # 2 m-rows x 2 k-groups x 2 col-tiles
+
+    def test_energy_monotone_in_vdd(self):
+        es = [energy.energy_per_cycle_j(v) for v in (0.6, 0.8, 1.0, 1.2)]
+        assert all(a < b for a, b in zip(es, es[1:]))

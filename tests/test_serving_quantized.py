@@ -1,0 +1,89 @@
+"""int8 weight-only serving: transform correctness + end-to-end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import transformer
+from repro.serve import quantized as sq
+
+
+def test_leaf_quantization_error_bounded():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 16)),
+                    jnp.float32)
+    q = sq._quantize_leaf(w)
+    assert q["w_q"].dtype == jnp.int8
+    back = np.asarray(sq.dequantize_weight(q, jnp.float32))
+    step = np.asarray(q["w_s"])[0]
+    assert np.all(np.abs(back - np.asarray(w)) <= step * 0.5 + 1e-7)
+
+
+def test_transform_structure_and_exemptions():
+    cfg = get_config("qwen2_moe_a2_7b", smoke=True)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    qp = sq.quantize_params_for_serving(params)
+    # embeddings/norms untouched
+    assert qp["embed"]["table"].dtype == params["embed"]["table"].dtype
+    # a linear got codes+scales
+    unit = qp["units"]["layer_00"]
+    assert set(unit["attn"]["wq"]["w"].keys()) == {"w_q", "w_s"}
+    assert unit["attn"]["wq"]["w"]["w_q"].dtype == jnp.int8
+    # MoE banks quantized with per-channel scale keeping expert dim
+    moe = unit["moe"]
+    # scanned units stack a leading layers dim onto the [E, K, N] bank
+    assert moe["gate"]["w_q"].ndim == 4
+    assert moe["gate"]["w_s"].shape[-2] == 1
+    # the router stays high-precision by design
+    assert not isinstance(moe["router"]["w"], dict)
+    # biases untouched
+    assert unit["attn"]["wq"]["b"].dtype != jnp.int8
+
+
+def test_axes_transform_matches_param_transform():
+    cfg = get_config("qwen2_moe_a2_7b", smoke=True)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    qp = sq.quantize_params_for_serving(params)
+    qa = sq.quantize_axes_for_serving(transformer.model_axes(cfg))
+    # identical tree structure (the dry-run shards one with the other)
+    s1 = jax.tree.structure(
+        jax.tree.map(lambda _: 0, qp))
+    s2 = jax.tree.structure(
+        jax.tree.map(lambda _: 0, qa,
+                     is_leaf=lambda x: isinstance(x, tuple)))
+    assert s1 == s2
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "granite_moe_1b",
+                                  "rwkv6_1_6b"])
+def test_w8_serving_close_to_fp(arch):
+    cfg = get_config(arch, smoke=True).replace(activation_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = transformer.init(key, cfg)
+    qp = sq.quantize_params_for_serving(params)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    caches_fp = transformer.init_caches(cfg, B, S, dtype=jnp.float32)
+    caches_q = transformer.init_caches(cfg, B, S, dtype=jnp.float32)
+    lg_fp, _ = transformer.prefill(params, toks, caches_fp, cfg)
+    lg_q, _ = transformer.prefill(qp, toks, caches_q, cfg)
+    # same top-1 on an 8-bit weight grid (weights were random normals)
+    agree = np.mean(np.asarray(jnp.argmax(lg_fp, -1))
+                    == np.asarray(jnp.argmax(lg_q, -1)))
+    assert agree >= 0.5
+    rel = float(jnp.linalg.norm(lg_q - lg_fp)
+                / (jnp.linalg.norm(lg_fp) + 1e-9))
+    assert rel < 0.15, rel
+
+
+def test_w8_decode_runs():
+    cfg = get_config("qwen2_0_5b", smoke=True)
+    params = sq.quantize_params_for_serving(
+        transformer.init(jax.random.PRNGKey(0), cfg))
+    caches = transformer.init_caches(cfg, 2, 16)
+    lg, caches = transformer.decode_step(
+        params, jnp.asarray([1, 2], jnp.int32),
+        jnp.asarray(0, jnp.int32), caches, cfg)
+    assert np.all(np.isfinite(np.asarray(lg, np.float32)))
