@@ -103,8 +103,16 @@ def evaluate(
     params, bn, ds, policy: CIMPolicy, *, n_images: int = 256,
     batch: int = 64, seed: int = 0,
 ) -> float:
-    """Test accuracy under a CIM execution policy."""
+    """Test accuracy under a CIM execution policy.
+
+    CIM-mode policies evaluate through weight-stationary plans
+    (resnet.plan_params): weight quantization/colsums/bit-planes are
+    computed once per policy instead of once per batch — numerically
+    identical, measurably faster on the sweep grids.
+    """
     cfg = dataclasses.replace(RESNET_CFG, cim=policy)
+    if policy.mode != "fp":
+        params = resnet.plan_params(params, policy)
     fwd = _eval_fn(cfg)
     correct = total = 0
     key = jax.random.PRNGKey(seed)

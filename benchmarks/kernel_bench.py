@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, emit
-from repro.core import matmul
+from repro.configs.base import CIMPolicy
+from repro.core import engine, matmul
 from repro.core.params import PAPER_OP_16ROWS
 from repro.kernels.cim_mac import gpq_matmul
 from repro.kernels.ref import cim_matmul_ref
@@ -87,5 +88,52 @@ def main(quick: bool = False) -> None:
     )
 
 
+def planned_main(quick: bool = False) -> None:
+    """Planned vs. unplanned decode-shape matmul latency.
+
+    The decode hot path is small-M (a handful of in-flight tokens)
+    against large stationary [K, N] weights, so the per-call weight
+    transforms (quantize + colsum + bit-slice) the old one-shot API
+    paid are the dominant avoidable cost. The plan/execute split
+    removes them; this tracks the number.
+    """
+    cfg = PAPER_OP_16ROWS
+    rng = np.random.default_rng(0)
+    m = 8  # decode: one token per in-flight request
+    k = n = 256 if quick else 1024
+    x = jnp.asarray(rng.normal(size=(m, k)).clip(-3, 3), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.1, jnp.float32)
+
+    for mode in ("cim-exact", "cim"):
+        policy = CIMPolicy(mode=mode, cim=cfg, ste=False)
+        plan = engine.plan_weights(w, cfg, policy)
+        oneshot = jax.jit(lambda x, w, p=policy: engine.matmul(x, w, p))
+        planned = jax.jit(lambda x, pl, p=policy: engine.execute(x, pl, p))
+
+        y0 = jax.block_until_ready(oneshot(x, w))
+        y1 = jax.block_until_ready(planned(x, plan))
+        reps = 5 if quick else 20
+        with Timer() as t_un:
+            for _ in range(reps):
+                jax.block_until_ready(oneshot(x, w))
+        with Timer() as t_pl:
+            for _ in range(reps):
+                jax.block_until_ready(planned(x, plan))
+        un_us, pl_us = t_un.us / reps, t_pl.us / reps
+        emit(
+            f"plan_decode_{mode}_unplanned", un_us,
+            f"m={m};k={k};n={n}",
+        )
+        # Bit-exact eagerly (tests/test_engine.py); across two different
+        # jitted graphs XLA's fusion/FMA choices differ at ~1e-7 rel.
+        agree = bool(np.allclose(np.asarray(y0), np.asarray(y1),
+                                 rtol=1e-5, atol=1e-6))
+        emit(
+            f"plan_decode_{mode}_planned", pl_us,
+            f"speedup={un_us / max(pl_us, 1e-9):.2f}x;allclose={agree}",
+        )
+
+
 if __name__ == "__main__":
     main()
+    planned_main()

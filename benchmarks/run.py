@@ -28,6 +28,7 @@ ALL = {
     "table1": table1_accuracy.main,
     "table2": table2_summary.main,
     "kernel": kernel_bench.main,
+    "plan": kernel_bench.planned_main,
     "roofline": roofline.main,
 }
 

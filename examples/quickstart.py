@@ -4,7 +4,8 @@ Runs in seconds on CPU:
   1. one voltage-domain macro op (the faithful circuit model),
   2. the same computation as an integer GPQ matmul + Pallas kernel,
   3. a CIM-executed linear layer inside a tiny transformer,
-  4. the paper's operating-point numbers from the energy model.
+  4. the weight-stationary plan/execute split (docs/api.md),
+  5. the paper's operating-point numbers from the energy model.
 
 Usage: PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,12 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import CIMPolicy
 from repro.core import (
     PAPER_OP_16ROWS,
     adc_transfer_int,
     cim_matmul,
     cim_matmul_exact_int,
     cim_matmul_int,
+    engine,
     macro_op,
     macro_report,
 )
@@ -75,7 +78,24 @@ g = jax.grad(lambda w: jnp.sum(
     cim_matmul(x, w, cfg, mode='cim', act_symmetric=True) ** 2))(w)
 print(f"  STE gradient norm: {float(jnp.linalg.norm(g)):.3f}")
 
-# ---- 4. the paper's headline numbers -----------------------------------
+# ---- 4. weight-stationary plan/execute (the serving hot path) ----------
+# The macro stores weights once and reuses them per input; the API
+# mirrors that: plan_weights once, execute per batch. Bit-exact with
+# the one-shot call above, minus all per-call weight-side work.
+policy = CIMPolicy(mode="cim", cim=cfg, act_symmetric=True)
+plan = engine.plan_weights(w, cfg, policy)  # codes+colsum+planes, once
+y_planned = engine.execute(x, plan, policy)
+x_next = jax.nn.relu(jax.random.normal(jax.random.fold_in(key, 3),
+                                       (32, 128)))
+y_next = engine.execute(x_next, plan, policy)  # plan reused
+print("\nweight-stationary plan/execute")
+print(f"  planned == one-shot: {bool(jnp.array_equal(y_planned, y_cim))}")
+print(f"  plan storage: codes {plan.codes.dtype}, grouped planes "
+      f"{plan.planes.dtype}{list(plan.planes.shape)} [G,B,rows,N], "
+      f"backends {engine.backend_names()}")
+print(f"  second batch through same plan: {y_next.shape}")
+
+# ---- 5. the paper's headline numbers -----------------------------------
 print("\nanalytical macro model (28nm anchors)")
 for vdd in (0.6, 0.9, 1.2):
     rep = macro_report(cfg.replace(vdd=vdd))

@@ -24,7 +24,12 @@ def demo(arch: str, mode: str):
     if mode != "fp":
         cfg = cfg.replace(cim=CIMPolicy(mode=mode, cim=PAPER_OP_16ROWS))
     params = transformer.init(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, max_len=96, batch=2)
+    # plan=True precomputes the weight-stationary CIM state once
+    # (core.engine.plan_params); every decode step then skips the
+    # weight-side quantize/colsum work. Tokens are bit-identical to
+    # the unplanned engine under CIM modes.
+    engine = ServeEngine(params, cfg, max_len=96, batch=2,
+                         plan=(mode != "fp"))
     batcher = ContinuousBatcher(engine, eos_token=-1)
 
     rng = np.random.default_rng(0)

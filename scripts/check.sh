@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify with base deps only: the suite must collect and pass
+# without the optional extras (zstandard, hypothesis) — optional-dep
+# imports are gated in-tree, and this is the command CI runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,9 +1,15 @@
-"""Checkpointing: msgpack + zstd tensor store, async writes, elastic load.
+"""Checkpointing: msgpack + zstd/zlib tensor store, async writes,
+elastic load.
 
 Layout:
   <dir>/step_<n>/manifest.msgpack   -- tree structure + tensor metadata
+                                       (+ "compression" format tag)
   <dir>/step_<n>/data.bin.zst       -- concatenated tensor payloads
   <dir>/LATEST                      -- atomic pointer (text, step number)
+
+``zstandard`` is an optional dependency: when absent, writes fall back
+to stdlib zlib (tagged in the manifest) and zstd-tagged checkpoints
+raise a clear error on read. Either codec round-trips bit-exactly.
 
 Design points for 1000+-node operation:
   * atomic publish: payload is fully written + fsynced before LATEST is
@@ -26,15 +32,74 @@ from __future__ import annotations
 import os
 import pathlib
 import threading
+import zlib
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dep: zstd is faster/denser, zlib is always there
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    zstandard = None
 
 _KEY_SEP = "/"
+
+# Payload codec, recorded in the manifest so readers never guess.
+# Checkpoints written before the tag existed were always zstd.
+_DEFAULT_COMPRESSION = "zstd" if zstandard is not None else "zlib"
+
+
+class _ZlibWriter:
+    """Streaming zlib writer with the zstd stream_writer surface."""
+
+    def __init__(self, f, level: int):
+        self._f = f
+        self._comp = zlib.compressobj(level)
+
+    def write(self, data: bytes) -> None:
+        self._f.write(self._comp.compress(data))
+
+    def finish(self) -> None:
+        self._f.write(self._comp.flush())
+
+
+def _open_writer(f, compression: str):
+    if compression == "zstd":
+        cctx = zstandard.ZstdCompressor(level=3)
+        writer = cctx.stream_writer(f)
+        return writer, lambda: writer.flush(zstandard.FLUSH_FRAME)
+    if compression == "zlib":
+        writer = _ZlibWriter(f, level=3)
+        return writer, writer.finish
+    raise ValueError(f"unknown compression '{compression}'")
+
+
+def _decompress(blob: bytes, compression: str, max_output_size: int):
+    if compression == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint payload is zstd-compressed but the optional "
+                "'zstandard' package is not installed (pip install "
+                "zstandard, or re-write the checkpoint on a host that "
+                "has it)"
+            )
+        dctx = zstandard.ZstdDecompressor()
+        return dctx.decompress(blob, max_output_size=max_output_size)
+    if compression == "zlib":
+        # Mirror the zstd path's bound: a corrupt/tampered payload must
+        # fail instead of allocating unboundedly.
+        d = zlib.decompressobj()
+        out = d.decompress(blob, max_output_size)
+        if d.unconsumed_tail:
+            raise ValueError(
+                "zlib checkpoint payload exceeds the manifest's "
+                f"declared size ({max_output_size} bytes)"
+            )
+        return out
+    raise ValueError(f"unknown compression '{compression}'")
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -77,11 +142,13 @@ def save(tree: Any, directory: str | os.PathLike, step: int) -> str:
     tmp.mkdir(parents=True, exist_ok=True)
 
     entries = _flatten_with_paths(tree)
-    cctx = zstandard.ZstdCompressor(level=3)
+    compression = _DEFAULT_COMPRESSION
     manifest = []
     offset = 0
+    # Filename kept for format continuity even under the zlib fallback;
+    # the manifest's "compression" tag is authoritative.
     with open(tmp / "data.bin.zst", "wb") as f:
-        writer = cctx.stream_writer(f)
+        writer, finish = _open_writer(f, compression)
         for name, arr in entries:
             raw = np.ascontiguousarray(arr).tobytes()
             writer.write(raw)
@@ -95,11 +162,15 @@ def save(tree: Any, directory: str | os.PathLike, step: int) -> str:
                 }
             )
             offset += len(raw)
-        writer.flush(zstandard.FLUSH_FRAME)
+        finish()
         f.flush()
         os.fsync(f.fileno())
     with open(tmp / "manifest.msgpack", "wb") as f:
-        f.write(msgpack.packb({"step": step, "tensors": manifest}))
+        f.write(msgpack.packb({
+            "step": step,
+            "compression": compression,
+            "tensors": manifest,
+        }))
         f.flush()
         os.fsync(f.fileno())
 
@@ -169,9 +240,9 @@ def restore(
             raise FileNotFoundError(f"no LATEST in {directory}")
     d = directory / f"step_{step:08d}"
     meta = msgpack.unpackb((d / "manifest.msgpack").read_bytes())
-    dctx = zstandard.ZstdDecompressor()
-    blob = dctx.decompress(
+    blob = _decompress(
         (d / "data.bin.zst").read_bytes(),
+        meta.get("compression", "zstd"),  # pre-tag checkpoints: zstd
         max_output_size=sum(t["nbytes"] for t in meta["tensors"]) or 1,
     )
     by_name = {}

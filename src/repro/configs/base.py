@@ -60,10 +60,25 @@ class RWKVConfig:
 
 @dataclasses.dataclass(frozen=True)
 class CIMPolicy:
-    """Where/how the paper's macro executes a model's weight matmuls."""
+    """Where/how the paper's macro executes a model's weight matmuls.
+
+    This is the single source of truth consumed by the plan/execute
+    engine (core.engine), models/common.linear_apply and models/resnet:
+    the execution mode, the macro operating point, and every per-call
+    knob the old ``cim_matmul(mode=..., act_symmetric=..., ste=...)``
+    kwarg sprawl carried live here. Being a frozen (hashable) dataclass
+    it doubles as a static jit argument.
+    """
 
     mode: str = "fp"  # 'fp' | 'cim-exact' | 'cim' | 'cim-kernel'
     cim: CIMConfig = dataclasses.field(default_factory=CIMConfig)
+    # Execution backend key in core.engine's registry; '' derives the
+    # backend from `mode` (the mode strings are registered aliases).
+    backend: str = ""
+    # Straight-through gradients through the macro forward (QAT). Only
+    # consulted by the one-shot engine.matmul path; planned execution
+    # is inference-only.
+    ste: bool = True
     # Which matmul families run through the macro (see DESIGN.md Sec. 5).
     apply_to_attn_proj: bool = True
     apply_to_mlp: bool = True

@@ -1,8 +1,41 @@
 """Core: the paper's P-8T SRAM CIM macro as a composable JAX feature.
 
-Public API:
+The execution model is weight-stationary, like the silicon: weights are
+transformed into their stored representation once, then reused across
+every input batch.
+
+  plan_weights(w, cfg [, policy]) -> PlannedWeights
+      One-time weight-side work: signed int codes, per-output-channel
+      scales, per-column code sums (zero-point correction), optional
+      bit-sliced planes. A jit-friendly pytree.
+  execute(x, plan, policy [, key=]) -> y
+      Per-input work only: activation quantization, the integer macro
+      matmul on a registered backend, digital dequantization.
+  engine.matmul(x, w, policy [, key=]) -> y
+      One-shot plan+execute with straight-through gradients, for
+      weights that change every step (training / QAT). (Not re-exported
+      at package level: the name would shadow the core.matmul module.)
+  plan_params(params [, policy=]) -> params'
+      plan_weights over a whole parameter pytree (serving; also the
+      digital int8 weight-only representation when policy is 'fp').
+  register_backend(name, fn) / get_backend / backend_names
+      String-keyed execution-backend registry. Built-ins: "fp",
+      "exact", "behavioral", "pallas" (legacy CIMPolicy.mode strings
+      'cim-exact'/'cim'/'cim-kernel' resolve as aliases).
+
+Quickstart (see docs/api.md for more):
+
+    from repro.configs.base import CIMPolicy
+    from repro.core import PAPER_OP_16ROWS, execute, plan_weights
+
+    policy = CIMPolicy(mode="cim", cim=PAPER_OP_16ROWS)
+    plan = plan_weights(w, policy.cim, policy)   # once
+    y0 = execute(x0, plan, policy)               # per batch
+    y1 = execute(x1, plan, policy)
+
+Also exported:
   CIMConfig            -- macro operating point (paper defaults)
-  cim_matmul           -- the macro as a matmul execution mode (fp/cim/...)
+  cim_matmul           -- DEPRECATED one-shot shim over plan/execute
   macro_op             -- faithful voltage-domain single-macro oracle
   quantize_acts/weights, bitslice_weights -- datapath quantizers
   adc_transfer_int, reference_voltages -- coarse-fine ADC model
@@ -30,6 +63,20 @@ from repro.core.energy import (
     frequency_mhz,
     layer_energy_j,
     macro_report,
+)
+# NOTE: engine.matmul (the one-shot QAT entry point) is deliberately
+# NOT re-exported here — the name would shadow the core.matmul
+# submodule attribute; reach it as ``from repro.core import engine``.
+from repro.core.engine import (
+    PlannedWeights,
+    backend_names,
+    execute,
+    get_backend,
+    plan_params,
+    plan_weights,
+    planned_axes,
+    quantized_backend,
+    register_backend,
 )
 from repro.core.macro import MacroOut, macro_op, macro_op_reference_digital
 from repro.core.matmul import (
@@ -61,6 +108,7 @@ __all__ = [
     "MacroOut",
     "PAPER_OP_16ROWS",
     "PAPER_OP_8ROWS",
+    "PlannedWeights",
     "QuantizedActs",
     "QuantizedWeights",
     "abl_voltage_from_pmac",
@@ -70,6 +118,7 @@ __all__ = [
     "adc_flat_flash",
     "adc_read_voltage",
     "adc_transfer_int",
+    "backend_names",
     "bitslice_weights",
     "cim_matmul",
     "cim_matmul_exact_int",
@@ -79,18 +128,25 @@ __all__ = [
     "dequantize_acts",
     "dequantize_weights",
     "energy_per_cycle_j",
+    "execute",
     "fake_quant_acts",
     "fake_quant_weights",
     "frequency_mhz",
+    "get_backend",
     "layer_energy_j",
     "macro_op",
     "macro_op_reference_digital",
     "macro_report",
     "multiply_bitcell",
+    "plan_params",
+    "plan_weights",
     "plane_signs",
+    "planned_axes",
     "pmac_from_abl_voltage",
     "quantize_acts",
     "quantize_weights",
+    "quantized_backend",
     "reference_voltages",
+    "register_backend",
     "unslice_weights",
 ]

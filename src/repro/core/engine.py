@@ -1,0 +1,546 @@
+"""Weight-stationary plan/execute CIM API and the backend registry.
+
+The paper's macro is weight-stationary: 8-bit weights are written into
+the P-8T SRAM arrays once and reused for every input vector. This module
+makes that split explicit:
+
+  plan_weights(w, cfg)        -> PlannedWeights   (once per weight)
+  execute(x, plan, policy)    -> y                (per input batch)
+
+``PlannedWeights`` is a jit-friendly pytree holding everything the
+macro "stores": signed integer weight codes, optional bit-sliced planes,
+the per-column code sums used for the digital zero-point correction,
+and the per-output-channel dequantization scales. ``execute`` performs
+only the per-input work (activation quantization, the integer macro
+matmul, digital dequant) — none of the weight-side transforms are
+repeated per call.
+
+Execution backends are registered by string key:
+
+  "fp"          plain floating-point matmul (framework baseline)
+  "exact"       integer-exact quantized matmul (paper w/o ADC + noise)
+  "behavioral"  full ADC/noise behavioral model (paper-faithful)
+  "pallas"      same semantics via the Pallas GPQ kernel
+
+The legacy mode names ('cim-exact', 'cim', 'cim-kernel') resolve to the
+same backends, so a ``CIMPolicy.mode`` string is a valid backend key.
+``register_backend`` lets deployments plug in alternatives (e.g. a
+device-specific kernel) without touching the dispatch code.
+
+A backend is ``fn(x2, plan, policy, key) -> y2`` over 2-D inputs; the
+quantized built-ins share :func:`quantized_backend`, which wraps an
+integer kernel ``(x_codes, plan, cfg, key) -> y_int`` with the common
+activation-quantize / dequantize / zero-point epilogue.
+
+``plan_params`` lifts planning over whole parameter pytrees (used by
+``serve.quantized`` and ``ServeEngine``), unifying the CIM path and the
+digital int8 weight-only serving path behind one representation.
+
+One-shot entry points with straight-through gradients (QAT) remain
+available as :func:`matmul` here and the backward-compatible
+``core.matmul.cim_matmul`` shim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core import matmul as matmul_lib
+from repro.core.params import CIMConfig
+
+
+class CIMPolicyLike(Protocol):
+    """Structural type for repro.configs.base.CIMPolicy.
+
+    Engine code is duck-typed against it to keep core free of config
+    imports (configs.base already imports core.params).
+    """
+
+    mode: str
+    cim: CIMConfig
+    act_symmetric: bool
+    act_clip_pct: float
+    ste: bool
+    backend: str
+
+
+# ---------------------------------------------------------------------------
+# PlannedWeights
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("codes", "scale", "colsum", "w", "planes"),
+    meta_fields=("weight_bits",),
+)
+@dataclasses.dataclass(frozen=True)
+class PlannedWeights:
+    """Persistent stored-weight state of one (stack of) linear layer(s).
+
+    The macro analogue: ``codes``/``planes`` are what sits in the SRAM
+    arrays, ``colsum``/``scale`` are the digital epilogue constants.
+
+    Fields (all but ``codes``/``scale`` optional):
+      codes:   [..., K, N] signed weight codes (int8 when weight_bits<=8).
+      scale:   [..., 1, N] f32 per-output-channel dequant scale.
+      colsum:  [..., 1, N] f32 per-column sum of codes (zero-point fix).
+      w:       original full-precision weights, kept when the plan must
+               also serve non-CIM (fp / digitally-exempt) matmuls.
+      planes:  [G, B, rows_active, N] int8 two's-complement bit planes,
+               pre-grouped into the macro's row-group layout (zero-
+               padded along K) so execute does no per-call weight-side
+               reshaping. Kept when the behavioral backend will run
+               repeatedly on this plan.
+      weight_bits: static weight precision (pytree metadata).
+    """
+
+    codes: Any
+    scale: Any
+    colsum: Any = None
+    w: Any = None
+    planes: Any = None
+    weight_bits: int = 8
+
+    # -- convenience views -------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self.codes.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[-1]
+
+    @property
+    def codes_i32(self) -> jax.Array:
+        c = self.codes
+        return c if c.dtype == jnp.int32 else c.astype(jnp.int32)
+
+    def dequantized(self, dtype=jnp.float32) -> jax.Array:
+        """w ~= scale * codes (the digital int8 serving read path)."""
+        return self.codes.astype(dtype) * self.scale.astype(dtype)
+
+    def best_weights(self, dtype=jnp.float32) -> jax.Array:
+        """Full-precision weights if kept, else the dequantized codes."""
+        if self.w is not None:
+            return self.w.astype(dtype)
+        return self.dequantized(dtype)
+
+
+def _grouped_planes_shape(
+    k: int, n: int, cfg: CIMConfig
+) -> tuple[int, int, int, int]:
+    rows = cfg.rows_active
+    return (-(-k // rows), cfg.weight_bits, rows, n)
+
+
+def _grouped_planes(codes: jax.Array, cfg: CIMConfig) -> jax.Array:
+    """[K, N] signed codes -> [G, B, rows, N] int8 bit planes.
+
+    The macro's row-group layout: group g holds rows g*rows..(g+1)*rows
+    of every bit plane, zero-padded along K (bit planes of code 0 are
+    all 0, so padding is neutral — tested in test_cim_matmul).
+    """
+    k, n = codes.shape
+    g, b, rows, _ = _grouped_planes_shape(k, n, cfg)
+    p = quant.bitslice_weights(codes, b, dtype=jnp.int8)  # [B, K, N]
+    p = jnp.pad(p, ((0, 0), (0, g * rows - k), (0, 0)))
+    return p.reshape(b, g, rows, n).transpose(1, 0, 2, 3)
+
+
+def plan_weights(
+    w: jax.Array,
+    cfg: CIMConfig | None = None,
+    policy: CIMPolicyLike | None = None,
+    *,
+    keep_fp: bool | None = None,
+    with_planes: bool | None = None,
+) -> PlannedWeights:
+    """Precompute the weight-stationary state for ``execute``.
+
+    All weight-side transforms of the old per-call path happen here,
+    once: symmetric per-channel quantization, per-column code sums, and
+    (optionally) two's-complement bit-slicing.
+
+    Args:
+      w: [..., K, N] float weights (last axis = output channels).
+      cfg: macro operating point; defaults to ``policy.cim`` or the
+        paper operating point.
+      policy: optional CIMPolicy; sets defaults for the knobs below.
+      keep_fp: retain the original float weights in the plan (needed
+        for bit-exact 'fp'/digitally-exempt execution). Default True;
+        pass False for the storage-saving digital int8 serving form
+        (plan_params' 'fp'-policy default).
+      with_planes: precompute the bit-sliced planes (saves per-call
+        slicing in the behavioral backend). Default: only when the
+        policy's mode is the behavioral model.
+    """
+    if cfg is None:
+        cfg = policy.cim if policy is not None else CIMConfig()
+    mode = policy.mode if policy is not None else None
+    if keep_fp is None:
+        keep_fp = True
+    if with_planes is None:
+        with_planes = mode in ("cim", "behavioral")
+
+    bits = cfg.weight_bits
+    # Quantize in f32 regardless of the storage dtype of w (a bf16
+    # amax/scale would perturb the codes; no-op for f32 params).
+    qw = quant.quantize_weights(w.astype(jnp.float32), bits)
+    codes = qw.codes.astype(cfg.codes_dtype)
+    colsum = jnp.sum(qw.codes, axis=-2, keepdims=True).astype(jnp.float32)
+    planes = None
+    if with_planes:
+        if qw.codes.ndim != 2:
+            raise ValueError(
+                "with_planes requires a 2-D [K, N] weight; got shape "
+                f"{qw.codes.shape}"
+            )
+        planes = _grouped_planes(qw.codes, cfg)
+    return PlannedWeights(
+        codes=codes,
+        scale=qw.scale.astype(jnp.float32),
+        colsum=colsum,
+        w=w if keep_fp else None,
+        planes=planes,
+        weight_bits=bits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+# fn(x2 [M, K] float, plan, policy, key) -> y2 [M, N] float
+BackendFn = Callable[
+    [jax.Array, PlannedWeights, CIMPolicyLike, jax.Array | None], jax.Array
+]
+
+_BACKENDS: dict[str, BackendFn] = {}
+
+# Legacy CIMPolicy.mode strings -> canonical backend keys.
+_MODE_ALIASES = {
+    "cim-exact": "exact",
+    "cim": "behavioral",
+    "cim-kernel": "pallas",
+}
+
+
+def register_backend(
+    name: str, fn: BackendFn, *, overwrite: bool = False
+) -> None:
+    """Register an execution backend under a string key."""
+    if name in _MODE_ALIASES:
+        raise ValueError(
+            f"'{name}' is a reserved mode alias for "
+            f"'{_MODE_ALIASES[name]}'; register under the canonical key"
+        )
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(
+            f"backend '{name}' already registered (overwrite=True to "
+            "replace)"
+        )
+    _BACKENDS[name] = fn
+
+
+def get_backend(name: str) -> BackendFn:
+    """Resolve a backend key (canonical name or legacy mode alias)."""
+    key = _MODE_ALIASES.get(name, name)
+    try:
+        return _BACKENDS[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown CIM backend '{name}'; registered: "
+            f"{sorted(_BACKENDS)}"
+        ) from None
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def quantized_backend(int_fn) -> BackendFn:
+    """Wrap ``int_fn(x_codes, plan, cfg, key) -> y_int`` with the shared
+    quantized-execution epilogue (the digital periphery of the macro):
+    dynamic activation quantization in, dequantization + zero-point
+    column correction out."""
+
+    def run(x2, plan, policy, key):
+        cfg = policy.cim
+        qa = quant.quantize_acts(
+            x2,
+            cfg.act_bits,
+            symmetric=policy.act_symmetric,
+            clip_pct=policy.act_clip_pct,
+        )
+        y_int = int_fn(qa.codes, plan, cfg, key)
+        colsum = plan.colsum
+        if colsum is None:  # minimal plans: recover digitally (free)
+            colsum = jnp.sum(
+                plan.codes_i32, axis=-2, keepdims=True
+            ).astype(jnp.float32)
+        y = y_int - qa.zero_point.astype(jnp.float32) * colsum
+        return y * qa.scale * plan.scale
+
+    return run
+
+
+def _fp_backend(x2, plan, policy, key):
+    del policy, key
+    return x2 @ plan.best_weights(x2.dtype)
+
+
+def _exact_int(x_codes, plan, cfg, key):
+    del cfg, key
+    return matmul_lib.cim_matmul_exact_int(x_codes, plan.codes_i32)
+
+
+def _behavioral_int(x_codes, plan, cfg, key):
+    return matmul_lib.cim_matmul_int(
+        x_codes, plan.codes_i32, cfg, key=key, planes=plan.planes
+    )
+
+
+def _pallas_int(x_codes, plan, cfg, key):
+    del key  # kernel is noiseless by design (production inference path)
+    from repro.kernels import ops as kernel_ops  # lazy: optional dep
+
+    return kernel_ops.cim_matmul_kernel(x_codes, plan.codes_i32, cfg)
+
+
+register_backend("fp", _fp_backend)
+register_backend("exact", quantized_backend(_exact_int))
+register_backend("behavioral", quantized_backend(_behavioral_int))
+register_backend("pallas", quantized_backend(_pallas_int))
+
+
+# ---------------------------------------------------------------------------
+# execute / one-shot matmul
+# ---------------------------------------------------------------------------
+
+
+def execute(
+    x: jax.Array,
+    plan: PlannedWeights,
+    policy: CIMPolicyLike,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Run one input batch against a precomputed weight plan.
+
+    The backend is ``policy.backend`` when set, else derived from
+    ``policy.mode`` through the registry aliases. Inputs of any rank
+    are flattened to [M, K] and restored afterwards.
+    """
+    name = getattr(policy, "backend", "") or policy.mode
+    fn = get_backend(name)
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    y = fn(x2, plan, policy, key)
+    y = y.reshape(*orig_shape[:-1], plan.n)
+    if policy.mode != "fp":
+        y = y.astype(x.dtype)
+    return y
+
+
+def _plan_and_execute(x, w, policy, key):
+    plan = plan_weights(w, policy=policy)
+    return execute(x, plan, policy, key=key)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _matmul_ste(x, w, policy, key):
+    return _plan_and_execute(x, w, policy, key)
+
+
+def _matmul_ste_fwd(x, w, policy, key):
+    return _plan_and_execute(x, w, policy, key), (x, w)
+
+
+def _matmul_ste_bwd(policy, res, g):
+    # Straight-through: backward is the underlying linear map
+    # (d/dx = w^T, d/dw = x^T), the QAT estimator the paper's own
+    # system simulation implies.
+    x, w = res
+    k = x.shape[-1]
+    g2 = g.reshape(-1, g.shape[-1])
+    x2 = x.reshape(-1, k)
+    dx = (g2 @ w.T).reshape(x.shape).astype(x.dtype)
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw, None
+
+
+_matmul_ste.defvjp(_matmul_ste_fwd, _matmul_ste_bwd)
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    policy: CIMPolicyLike | None,
+    *,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """One-shot plan+execute for weights that change every step (QAT).
+
+    Training can't reuse a plan across steps, so this is the
+    gradient-capable entry point: forward runs the full planned path,
+    backward is the straight-through estimator when ``policy.ste``.
+    """
+    if policy is None or policy.mode == "fp":
+        return x @ w
+    if getattr(policy, "ste", True):
+        return _matmul_ste(x, w, policy, key)
+    return _plan_and_execute(x, w, policy, key)
+
+
+# ---------------------------------------------------------------------------
+# Whole-pytree planning (serving)
+# ---------------------------------------------------------------------------
+
+# Leaves that must never be weight-planned (mirrors serve.quantized).
+DEFAULT_EXEMPT_KEYS = frozenset(
+    {"scale", "bias", "b", "table", "a_log", "d_skip", "conv_w",
+     "conv_b", "mu_x", "decay_w0", "bonus_u", "pos_emb"}
+)
+# Modules kept high-precision by design: the MoE router (routing
+# decisions are precision-critical) and the tiny shared-expert gate.
+DEFAULT_EXEMPT_MODULES = frozenset({"router", "shared_gate"})
+# Keys carrying matmul weight leaves ([K, N] linears, [E, K, N] banks).
+DEFAULT_WEIGHT_KEYS = frozenset({"w", "gate", "up", "down"})
+_PLAN_MIN_DIM = 2
+
+
+def _plan_sds_leaf(
+    v, cfg: CIMConfig, keep_fp: bool, with_planes: bool
+) -> PlannedWeights:
+    """Shape/dtype stand-in plan for dry-run (ShapeDtypeStruct) trees.
+
+    Must mirror plan_weights field-for-field (same Nones) so dry-run and
+    concrete planned trees share one pytree structure.
+    """
+    epi = v.shape[:-2] + (1,) + v.shape[-1:]
+    planes = None
+    if with_planes:
+        planes = jax.ShapeDtypeStruct(
+            _grouped_planes_shape(v.shape[-2], v.shape[-1], cfg), jnp.int8
+        )
+    return PlannedWeights(
+        codes=jax.ShapeDtypeStruct(v.shape, cfg.codes_dtype),
+        scale=jax.ShapeDtypeStruct(epi, jnp.float32),
+        colsum=jax.ShapeDtypeStruct(epi, jnp.float32),
+        w=jax.ShapeDtypeStruct(v.shape, v.dtype) if keep_fp else None,
+        planes=planes,
+        weight_bits=cfg.weight_bits,
+    )
+
+
+def plan_params(
+    params: Any,
+    cfg: CIMConfig | None = None,
+    policy: CIMPolicyLike | None = None,
+    *,
+    keep_fp: bool | None = None,
+    with_planes: bool | None = None,
+    weight_keys: frozenset[str] = DEFAULT_WEIGHT_KEYS,
+    exempt_keys: frozenset[str] = DEFAULT_EXEMPT_KEYS,
+    exempt_modules: frozenset[str] = DEFAULT_EXEMPT_MODULES,
+) -> Any:
+    """Rewrite every eligible weight leaf into a PlannedWeights.
+
+    One transform serves both serving representations:
+      * digital int8 weight-only (policy None / mode 'fp'): plans drop
+        the float weights, halving/quartering HBM weight traffic — the
+        TPU analogue of the macro's resident 8-bit SRAM weights;
+      * CIM execution (other modes): plans keep the float weights so
+        digitally-exempt matmuls stay bit-identical, and the CIM
+        layers reuse codes/colsums/planes across every decode step.
+
+    Works on concrete arrays AND ShapeDtypeStruct trees (dry-run).
+    Embeddings/norms/etc. (``exempt_keys``/``exempt_modules``) pass
+    through untouched.
+    """
+    if cfg is None:
+        cfg = policy.cim if policy is not None else CIMConfig()
+    mode = policy.mode if policy is not None else "fp"
+    if keep_fp is None:
+        keep_fp = mode != "fp"
+    if with_planes is None:
+        with_planes = mode in ("cim", "behavioral")
+
+    def eligible(k, v):
+        return (
+            k in weight_keys
+            and k not in exempt_keys
+            and hasattr(v, "ndim")
+            and v.ndim >= _PLAN_MIN_DIM
+        )
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = v if k in exempt_modules else walk(v)
+            elif not eligible(k, v):
+                out[k] = v
+            elif isinstance(v, jax.ShapeDtypeStruct):
+                out[k] = _plan_sds_leaf(
+                    v, cfg, keep_fp,
+                    with_planes and len(v.shape) == 2,
+                )
+            else:
+                out[k] = plan_weights(
+                    v, cfg, policy, keep_fp=keep_fp,
+                    with_planes=with_planes and v.ndim == 2,
+                )
+        return out
+
+    return walk(params)
+
+
+def planned_axes(
+    axes: Any,
+    *,
+    keep_fp: bool = False,
+    weight_keys: frozenset[str] = DEFAULT_WEIGHT_KEYS,
+    exempt_modules: frozenset[str] = DEFAULT_EXEMPT_MODULES,
+) -> Any:
+    """Transform a logical-axes tree to match ``plan_params`` output.
+
+    Codes (and kept fp weights) inherit the weight's axes; the [..1, N]
+    epilogue vectors (scale, colsum) keep only the out-channel axis.
+    """
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = v if k in exempt_modules else walk(v)
+            elif (
+                k in weight_keys
+                and isinstance(v, tuple)
+                and len(v) >= _PLAN_MIN_DIM
+            ):
+                epi = v[:-2] + (None,) + v[-1:]
+                out[k] = PlannedWeights(
+                    codes=v,
+                    scale=epi,
+                    colsum=epi,
+                    w=v if keep_fp else None,
+                    planes=None,
+                )
+            else:
+                out[k] = v
+        return out
+
+    return walk(axes)

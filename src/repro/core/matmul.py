@@ -9,11 +9,15 @@ Semantics (per output element, reduction dim K tiled into groups of
 where ADC is the cutoff-clipped coarse-fine transfer of adc.py (floor,
 step = threshold / 2**adc_bits) with optional Gaussian hardware error.
 
-Modes:
+Modes (execution backends; see core.engine for the registry):
   'fp'         : plain floating-point matmul (framework baseline).
   'cim-exact'  : integer-exact quantized matmul (paper w/o ADC + noise).
   'cim'        : full behavioral model (paper-faithful; used for Table I).
   'cim-kernel' : same semantics via the Pallas GPQ kernel (repro.kernels).
+
+This module keeps the integer kernels (cim_matmul_int / _exact_int) and
+the DEPRECATED one-shot ``cim_matmul`` wrapper; the weight-stationary
+plan/execute API and backend dispatch live in core.engine.
 
 The voltage-domain oracle for 'cim' is macro.macro_op; equivalence is
 asserted in tests/test_core_cim.py.
@@ -21,7 +25,6 @@ asserted in tests/test_core_cim.py.
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
@@ -44,6 +47,7 @@ def cim_matmul_int(
     cfg: CIMConfig,
     *,
     key: jax.Array | None = None,
+    planes: jax.Array | None = None,
 ) -> jax.Array:
     """Grouped-partial-sum quantized (GPQ) matmul in integer units.
 
@@ -52,6 +56,11 @@ def cim_matmul_int(
       w_codes: [K, N] int32 signed weight codes (weight_bits wide).
       cfg: macro operating point (rows_active = group size).
       key: PRNG key for hardware-error injection when cfg.noisy.
+      planes: optional precomputed bit planes in the grouped layout
+        [G, weight_bits, rows_active, N] produced by
+        core.engine.plan_weights (zero-padded along K); when given, the
+        per-call bit-slicing AND group-reshaping are both skipped.
+        Values must equal the bit planes of w_codes.
 
     Returns [M, N] float32: sum over groups/bit-planes of the dequantized
     ADC codes with shift-add weighting. Equals (x_codes @ w_codes) exactly
@@ -66,21 +75,18 @@ def cim_matmul_int(
     g = k_pad // rows
 
     x_p = jnp.pad(x_codes.astype(jnp.int32), ((0, 0), (0, k_pad - k)))
-    w_p = jnp.pad(w_codes.astype(jnp.int32), ((0, k_pad - k), (0, 0)))
-
-    # [G, rows, N] and [G, M, rows] group views.
-    w_g = w_p.reshape(g, rows, n)
-    x_g = x_p.reshape(m, g, rows).transpose(1, 0, 2)
+    x_g = x_p.reshape(m, g, rows).transpose(1, 0, 2)  # [G, M, rows]
 
     signs = quant.plane_signs(b).astype(jnp.float32)  # [B]
     use_noise = cfg.noisy and key is not None
     base_key = key if use_noise else jax.random.PRNGKey(0)
 
-    def body(acc, inputs):
-        gi, xg, wg = inputs
-        planes = quant.bitslice_weights(wg, b)  # [B, rows, N]
+    def group_contrib(acc, gi, xg, pg):
+        """pg: [B, rows, N] bit planes of one group (any int dtype)."""
         # One MXU-shaped contraction per group: [M, rows] x [rows, B*N].
-        flat = planes.transpose(1, 0, 2).reshape(rows, b * n)
+        flat = pg.astype(jnp.int32).transpose(1, 0, 2).reshape(
+            rows, b * n
+        )
         pmac = jax.lax.dot(
             xg, flat, preferred_element_type=jnp.int32
         ).reshape(m, b, n)
@@ -93,9 +99,32 @@ def cim_matmul_int(
         contrib = jnp.einsum("mbn,b->mn", pmac_hat, signs)
         return acc + contrib, None
 
+    if planes is None:
+        # Slice bit planes per group inside the scan: peak memory stays
+        # one [B, rows, N] tile, not the full [B, K, N] tensor.
+        w_p = jnp.pad(w_codes.astype(jnp.int32), ((0, k_pad - k), (0, 0)))
+        w_g = w_p.reshape(g, rows, n)
+
+        def body(acc, inputs):
+            gi, xg, wg = inputs
+            return group_contrib(acc, gi, xg, quant.bitslice_weights(wg, b))
+
+        xs = (jnp.arange(g, dtype=jnp.uint32), x_g, w_g)
+    else:
+        # Weight-stationary path: planes were sliced AND grouped once at
+        # plan time — no per-call weight-side work at all.
+        assert planes.shape == (g, b, rows, n), (
+            planes.shape, (g, b, rows, n),
+        )
+
+        def body(acc, inputs):
+            gi, xg, pg = inputs
+            return group_contrib(acc, gi, xg, pg)
+
+        xs = (jnp.arange(g, dtype=jnp.uint32), x_g, planes)
+
     acc0 = jnp.zeros((m, n), dtype=jnp.float32)
-    gids = jnp.arange(g, dtype=jnp.uint32)
-    acc, _ = jax.lax.scan(body, acc0, (gids, x_g, w_g))
+    acc, _ = jax.lax.scan(body, acc0, xs)
     return acc
 
 
@@ -108,44 +137,18 @@ def cim_matmul_exact_int(x_codes: jax.Array, w_codes: jax.Array) -> jax.Array:
     ).astype(jnp.float32)
 
 
-def _cim_forward(
-    x: jax.Array,
-    w: jax.Array,
-    cfg: CIMConfig,
-    mode: CIMMode,
-    key: jax.Array | None,
-    act_symmetric: bool,
-    act_clip_pct: float = 1.0,
-) -> jax.Array:
-    """Quantize -> macro matmul -> digital dequant + zero-point fix."""
-    orig_shape = x.shape
-    k = orig_shape[-1]
-    x2 = x.reshape(-1, k)
+def _policy_for(cfg, mode, act_symmetric, act_clip_pct, ste=True):
+    from repro.configs.base import CIMPolicy  # lazy: no cycle at import
 
-    qa = quant.quantize_acts(x2, cfg.act_bits, symmetric=act_symmetric,
-                             clip_pct=act_clip_pct)
-    qw = quant.quantize_weights(w, cfg.weight_bits)
-
-    if mode == "cim-exact":
-        y_int = cim_matmul_exact_int(qa.codes, qw.codes)
-    elif mode == "cim":
-        y_int = cim_matmul_int(qa.codes, qw.codes, cfg, key=key)
-    elif mode == "cim-kernel":
-        from repro.kernels import ops as kernel_ops  # local import: optional dep
-
-        y_int = kernel_ops.cim_matmul_kernel(qa.codes, qw.codes, cfg)
-    else:  # pragma: no cover - guarded by dispatcher
-        raise ValueError(mode)
-
-    # Digital zero-point correction: z * sum_k W[k, n]  (exact column sums
-    # are free digitally; the macro only ever saw unsigned codes).
-    colsum = jnp.sum(qw.codes, axis=0, keepdims=True).astype(jnp.float32)
-    y = (y_int - qa.zero_point.astype(jnp.float32) * colsum)
-    y = y * qa.scale * qw.scale
-    return y.reshape(*orig_shape[:-1], w.shape[-1]).astype(x.dtype)
+    return CIMPolicy(
+        mode=mode,
+        cim=cfg,
+        act_symmetric=act_symmetric,
+        act_clip_pct=act_clip_pct,
+        ste=ste,
+    )
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 5, 6))
 def cim_matmul_ste(
     x: jax.Array,
     w: jax.Array,
@@ -157,32 +160,13 @@ def cim_matmul_ste(
 ) -> jax.Array:
     """CIM matmul with straight-through gradients (QAT).
 
-    Forward runs the full macro model; backward treats the transfer as
-    the underlying linear map (d/dx = w^T, d/dw = x^T), the standard STE
-    the paper's own QAT-style system simulation implies.
+    Deprecated alias retained for backward compatibility; the STE
+    one-shot path now lives in core.engine.matmul.
     """
-    return _cim_forward(x, w, cfg, mode, key, act_symmetric,
-                        act_clip_pct)
+    from repro.core import engine  # lazy: engine imports this module
 
-
-def _ste_fwd(x, w, cfg, mode, key, act_symmetric, act_clip_pct):
-    return (
-        _cim_forward(x, w, cfg, mode, key, act_symmetric, act_clip_pct),
-        (x, w),
-    )
-
-
-def _ste_bwd(cfg, mode, act_symmetric, act_clip_pct, res, g):
-    x, w = res
-    k = x.shape[-1]
-    g2 = g.reshape(-1, g.shape[-1])
-    x2 = x.reshape(-1, k)
-    dx = (g2 @ w.T).reshape(x.shape).astype(x.dtype)
-    dw = (x2.T @ g2).astype(w.dtype)
-    return dx, dw, None
-
-
-cim_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+    policy = _policy_for(cfg, mode, act_symmetric, act_clip_pct, ste=True)
+    return engine.matmul(x, w, policy, key=key)
 
 
 def cim_matmul(
@@ -196,16 +180,24 @@ def cim_matmul(
     act_clip_pct: float = 1.0,
     ste: bool = True,
 ) -> jax.Array:
-    """Dispatching entry point used by model layers.
+    """One-shot CIM matmul. DEPRECATED shim over core.engine.
 
-    mode='fp' is a plain matmul; other modes run the macro model with
-    (optionally) STE gradients so models can train through the hardware.
+    Kept so existing callers and tests keep working; new code should
+    use the weight-stationary plan/execute API::
+
+        plan = engine.plan_weights(w, policy.cim, policy)
+        y = engine.execute(x, plan, policy)
+
+    or ``engine.matmul(x, w, policy)`` for per-step (QAT) weights. This
+    wrapper is bit-exact with plan-then-execute for every mode (asserted
+    in tests/test_engine.py). mode='fp' is a plain matmul; other modes
+    run the macro model with (optionally) STE gradients so models can
+    train through the hardware.
     """
     if mode == "fp":
         return x @ w
     assert cfg is not None, "CIM modes require a CIMConfig"
-    if ste:
-        return cim_matmul_ste(x, w, cfg, mode, key, act_symmetric,
-                              act_clip_pct)
-    return _cim_forward(x, w, cfg, mode, key, act_symmetric,
-                        act_clip_pct)
+    from repro.core import engine  # lazy: engine imports this module
+
+    policy = _policy_for(cfg, mode, act_symmetric, act_clip_pct, ste=ste)
+    return engine.matmul(x, w, policy, key=key)

@@ -158,6 +158,14 @@ class CIMConfig:
         return math.sqrt(dac_term + cmp_term) * self.share_denom / self.vdd
 
     @property
+    def codes_dtype(self):
+        """Narrowest int dtype holding signed weight codes (storage for
+        weight-stationary plans; int8 at the paper's 8-bit weights)."""
+        import jax.numpy as jnp
+
+        return jnp.int8 if self.weight_bits <= 8 else jnp.int32
+
+    @property
     def n_weight_cols(self) -> int:
         """Columns carrying weight bit-planes (80 - 16 ref = 64)."""
         return self.macro_cols - self.n_ref_cols

@@ -45,13 +45,6 @@ class QuantizedWeights(NamedTuple):
     scale: jax.Array  # f32, shape [1, N] (per out-channel) or scalar
 
 
-def _reduce_all_but(x: jax.Array, keep_axis: int | None):
-    if keep_axis is None:
-        return tuple(range(x.ndim))
-    keep_axis = keep_axis % x.ndim
-    return tuple(a for a in range(x.ndim) if a != keep_axis)
-
-
 def _range_stats(x, axes, keep, clip_pct: float):
     """(lo, hi) of the quantization range; clip_pct < 1 uses percentile
     clipping (outlier-robust calibration -- with per-tensor max scaling
@@ -117,12 +110,14 @@ def quantize_weights(
 ) -> QuantizedWeights:
     """Symmetric signed weight quantization (per output channel).
 
-    w: [..., K, N]; channel axis is the last one.
+    w: [..., K, N]; channel axis is the last one. The range reduces
+    over the K axis only, so leading batch dims (stacked layers,
+    expert banks [E, K, N]) each keep their own [..., 1, N] scales —
+    required for scanned-unit weight stacks.
     """
     qmax = (1 << (weight_bits - 1)) - 1
     if per_channel:
-        axes = _reduce_all_but(w, keep_axis=-1)
-        amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+        amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
     else:
         amax = jnp.max(jnp.abs(w))
     scale = jnp.maximum(amax, eps) / qmax
@@ -134,13 +129,17 @@ def dequantize_weights(q: QuantizedWeights) -> jax.Array:
     return q.scale * q.codes.astype(q.scale.dtype)
 
 
-def bitslice_weights(codes: jax.Array, weight_bits: int) -> jax.Array:
+def bitslice_weights(
+    codes: jax.Array, weight_bits: int, *, dtype=jnp.int32
+) -> jax.Array:
     """Slice signed int codes into binary planes (two's complement).
 
-    Returns uint planes with shape [weight_bits, *codes.shape]; plane b
+    Returns 0/1 planes with shape [weight_bits, *codes.shape]; plane b
     holds bit b of the two's-complement representation. Reconstruction:
       codes = sum_b plane_sign(b) * 2**b * planes[b]
-    with plane_sign(B-1) = -1 (MSB) and +1 otherwise.
+    with plane_sign(B-1) = -1 (MSB) and +1 otherwise. ``dtype`` selects
+    the storage type (int8 quarters the footprint of persistent plans;
+    values are only ever 0/1 so any int type is exact).
     """
     mask = (1 << weight_bits) - 1
     unsigned = jnp.bitwise_and(codes.astype(jnp.int32), mask)
@@ -149,7 +148,7 @@ def bitslice_weights(codes: jax.Array, weight_bits: int) -> jax.Array:
     planes = jnp.bitwise_and(
         jnp.right_shift(unsigned[None, ...], shifts), 1
     )
-    return planes.astype(jnp.int32)
+    return planes.astype(dtype)
 
 
 def plane_signs(weight_bits: int) -> jax.Array:
@@ -225,11 +224,16 @@ def fake_quant_acts(
 
 
 def fake_quant_weights(w: jax.Array, cfg: CIMConfig) -> jax.Array:
-    """Differentiable (STE) weight fake-quant to the signed grid."""
+    """Differentiable (STE) weight fake-quant to the signed grid.
+
+    The range reduces over K only (axis=-2), matching quantize_weights
+    exactly — QAT must train against the same per-[..., 1, N] scales
+    the planned/serving path deploys, including for stacked [E, K, N]
+    banks.
+    """
     qmax = float((1 << (cfg.weight_bits - 1)) - 1)
-    axes = _reduce_all_but(w, keep_axis=-1)
     amax = jax.lax.stop_gradient(
-        jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+        jnp.max(jnp.abs(w), axis=-2, keepdims=True)
     )
     scale = jnp.maximum(amax, 1e-8) / qmax
     codes = ste_clip(ste_round(w / scale), -qmax - 1.0, qmax)

@@ -289,16 +289,9 @@ def constrain(x, axes: tuple[str | None, ...]):
     few propagation cliffs (logits, embed output, FFN hidden) -- the
     MaxText pattern.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or not mesh.shape:
-        try:  # legacy `with mesh:` context
-            from jax._src import mesh as _mesh_lib  # noqa: PLC0415
-
-            mesh = _mesh_lib.thread_resources.env.physical_mesh
-        except Exception:  # noqa: BLE001
-            return x
-        if mesh is None or mesh.empty or not mesh.shape:
-            return x
+    mesh = _ctx_mesh()
+    if mesh is None:
+        return x
     entries = []
     for dim, ax in zip(x.shape, axes):
         names = []
@@ -326,7 +319,10 @@ def constrain(x, axes: tuple[str | None, ...]):
 
 
 def _ctx_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
+    # jax < 0.5 has no get_abstract_mesh; only the legacy `with mesh:`
+    # thread-resource context below exists there.
+    get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    mesh = get_abstract_mesh() if get_abstract_mesh is not None else None
     if mesh is not None and not mesh.empty and mesh.shape:
         return mesh
     try:  # legacy `with mesh:` context

@@ -1,9 +1,16 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Backend dispatch: the kernel lowers natively on TPU; everywhere else we
-run Pallas interpret mode (bit-exact semantics, executed on CPU), which
-is how the correctness sweeps in tests/test_kernels.py validate it
-against ref.py.
+Backend dispatch: model code reaches this module through the
+``core.engine`` backend registry (the built-in "pallas" backend — and
+its legacy alias 'cim-kernel' — resolves here lazily, so the Pallas
+dependency stays optional). The kernel lowers natively on TPU;
+everywhere else we run Pallas interpret mode (bit-exact semantics,
+executed on CPU), which is how the correctness sweeps in
+tests/test_kernels.py validate it against ref.py.
+
+``register_tuned_backend`` registers a "pallas-tuned" engine backend
+with explicit block sizes, the hook a deployment uses to pin tiling
+per shape without forking the dispatch code.
 """
 
 from __future__ import annotations
@@ -42,3 +49,26 @@ def cim_matmul_kernel(
         bk=bk,
         interpret=_use_interpret(),
     ).astype(jnp.float32)
+
+
+def register_tuned_backend(
+    *, bm: int = 128, bn: int = 128, bk: int = 128,
+    name: str = "pallas-tuned",
+) -> str:
+    """Register an engine backend pinning the kernel's block sizes.
+
+    Returns the backend key; select it per layer family via
+    ``CIMPolicy(backend=<key>, mode='cim-kernel', ...)``.
+    """
+    from repro.core import engine  # lazy: engine lazily imports us too
+
+    def _int_fn(x_codes, plan, cfg, key):
+        del key  # kernel is noiseless by design
+        return cim_matmul_kernel(
+            x_codes, plan.codes_i32, cfg, bm=bm, bn=bn, bk=bk
+        )
+
+    engine.register_backend(
+        name, engine.quantized_backend(_int_fn), overwrite=True
+    )
+    return name

@@ -5,8 +5,12 @@ Every layer module defines a ``*_spec(cfg) -> dict[str, ParamSpec]``;
 produces the matching pytree of logical-axis tuples consumed by
 repro.distributed.sharding. One source of truth for shapes/axes/init.
 
-Linear layers route through core.cim_matmul so the paper's macro is a
-per-layer execution mode (CIMPolicy), not a separate model.
+Linear layers route through the core.engine plan/execute API so the
+paper's macro is a per-layer execution mode (CIMPolicy), not a separate
+model. A weight leaf may be a plain array (planned on the fly — the
+training / QAT path) or a precomputed engine.PlannedWeights (the
+weight-stationary serving path: codes/colsums/planes are reused across
+every forward instead of being rebuilt per call).
 """
 
 from __future__ import annotations
@@ -18,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CIMPolicy
-from repro.core.matmul import cim_matmul
+from repro.core import engine
+from repro.core.engine import PlannedWeights
 
 Params = dict[str, Any]
 
@@ -113,22 +118,22 @@ def linear_apply(
     the MAC, paper Sec. III).
     """
     w = params["w"]
-    if isinstance(w, dict):  # int8 weight-only serving form
+    plan = None
+    if isinstance(w, PlannedWeights):
+        plan = w
+    elif isinstance(w, dict):  # legacy {'w_q','w_s'} int8 serving form
         from repro.serve.quantized import dequantize_weight
 
         w = dequantize_weight(w, x.dtype)
     if policy is None or policy.mode == "fp" or not cim_enabled:
-        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+        wd = plan.best_weights(x.dtype) if plan is not None else w
+        y = jnp.einsum("...k,kn->...n", x, wd.astype(x.dtype))
+    elif plan is not None:
+        # Weight-stationary: all weight-side transforms precomputed.
+        y = engine.execute(x, plan, policy, key=key)
     else:
-        y = cim_matmul(
-            x,
-            w,
-            policy.cim,
-            mode=policy.mode,
-            key=key,
-            act_symmetric=policy.act_symmetric,
-            act_clip_pct=policy.act_clip_pct,
-        )
+        # Fresh weights (training / QAT): plan per call, STE gradients.
+        y = engine.matmul(x, w, policy, key=key)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y

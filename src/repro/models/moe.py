@@ -85,13 +85,11 @@ def _router(params, x2, mo: MoEConfig, key=None):
 
 
 def _bank(params, name, dtype):
-    """Expert weight bank, dequantizing the int8 serving form if set."""
-    w = params[name]
-    if isinstance(w, dict):
-        from repro.serve.quantized import dequantize_weight
+    """Expert weight bank, reading through the planned (int8 serving /
+    CIM) representation when the tree was transformed by plan_params."""
+    from repro.serve.quantized import maybe_dequant
 
-        return dequantize_weight(w, dtype)
-    return w.astype(dtype)
+    return maybe_dequant(params[name], dtype)
 
 
 def _experts_ragged(params, xs, group_sizes, dtype):

@@ -5,6 +5,16 @@ prefill -> decode_step) with jitted steps. The slot-based continuous
 batcher admits new requests into finished slots between decode steps --
 the scheduling pattern real LM servers use, scaled down to one process.
 Decode caches are donated so the cache update is in-place on device.
+
+Weight-stationary serving: ``ServeEngine(..., plan=True)`` runs
+``core.engine.plan_params`` over the model parameters once at
+construction, so every prefill/decode step reuses precomputed weight
+codes/colsums/scales instead of re-quantizing the weight side per
+matmul -- the serving analogue of the paper's SRAM-resident weights.
+Under a CIM-mode policy the planned codes equal the per-call ones, so
+token streams are bit-identical to the unplanned engine (tested); under
+an 'fp' policy planning instead means digital int8 weight-only serving
+(plans drop the float weights for the HBM-traffic win).
 """
 
 from __future__ import annotations
@@ -17,12 +27,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import engine as cim_engine
 from repro.models import transformer
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int,
-                 batch: int):
+                 batch: int, plan: bool = False):
+        if plan:
+            params = cim_engine.plan_params(params, policy=cfg.cim)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len

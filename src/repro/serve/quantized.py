@@ -1,4 +1,4 @@
-"""Weight-only int8 serving (beyond-paper optimization).
+"""Weight-only int8 serving as a PlannedWeights representation.
 
 The paper's macro stores 8-bit weights resident in SRAM; the TPU
 deployment analogue is W8A16 weight-only quantization: weights live in
@@ -8,12 +8,15 @@ so int8 storage cuts the memory roofline term ~4x vs f32 / ~2x vs bf16
 (EXPERIMENTS §6). Quantization error is the same 8-bit grid the paper's
 accuracy analysis already covers (weight_bits=8).
 
-`quantize_params_for_serving` rewrites every eligible linear/einsum
-weight leaf {'w': [K, N]} (and MoE banks [E, K, N]) into
-{'w_q': int8, 'w_s': f32[1, N]}; `common.linear_apply` and the MoE
-einsums dispatch on the presence of 'w_q'. Embeddings and norms stay
-high precision (gather tables are latency-critical and tiny per step;
-norm scales are 1-D).
+Since the plan/execute redesign this module is a thin serving-flavored
+wrapper over ``core.engine.plan_params``: the old ad-hoc
+``{'w_q','w_s'}`` dict leaves are now ``engine.PlannedWeights`` (codes
+= w_q, scale = w_s), so the digital int8 path and the CIM execution
+path share one weight-transform API. ``common.linear_apply``, the MoE
+banks and mamba's direct projections all dispatch on the PlannedWeights
+type (with the legacy dict form still accepted for old checkpoints).
+Embeddings and norms stay high precision (gather tables are
+latency-critical and tiny per step; norm scales are 1-D).
 """
 
 from __future__ import annotations
@@ -21,95 +24,52 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-# Leaves that must never be weight-quantized.
-_EXEMPT_KEYS = {"scale", "bias", "b", "table", "a_log", "d_skip",
-                "conv_w", "conv_b", "mu_x", "decay_w0", "bonus_u",
-                "pos_emb"}
-# Modules kept high-precision by design: the MoE router (routing
-# decisions are precision-critical, DESIGN.md Sec. 5) and the tiny
-# shared-expert gate.
-_EXEMPT_MODULES = {"router", "shared_gate"}
-_QUANT_MIN_DIM = 2  # quantize 2-D (K,N) and 3-D (E,K,N) matmul weights
+from repro.core import engine
+from repro.core.engine import PlannedWeights
+
+# Retained names: serving policy knobs now defined once in core.engine
+# (eligibility — which keys/ranks get planned — lives there too).
+_EXEMPT_KEYS = engine.DEFAULT_EXEMPT_KEYS
+_EXEMPT_MODULES = engine.DEFAULT_EXEMPT_MODULES
 
 
-def _quantize_leaf(w: jax.Array) -> dict[str, jax.Array]:
+def _quantize_leaf(w: jax.Array) -> PlannedWeights:
     """Symmetric per-output-channel int8 (the paper's weight grid)."""
-    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    codes = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
-    return {"w_q": codes.astype(jnp.int8),
-            "w_s": scale.astype(jnp.float32)}
+    return engine.plan_weights(w, keep_fp=False, with_planes=False)
 
 
-def dequantize_weight(q: dict[str, jax.Array], dtype) -> jax.Array:
+def dequantize_weight(q, dtype) -> jax.Array:
+    """Read path for a planned (or legacy dict-form) int8 weight."""
+    if isinstance(q, PlannedWeights):
+        return q.dequantized(dtype)
     return q["w_q"].astype(dtype) * q["w_s"].astype(dtype)
 
 
 def maybe_dequant(w, dtype) -> jax.Array:
     """Pass-through for plain arrays; dequantize the int8 serving
     form. For modules that index weight leaves directly (mamba's
-    x_proj/dt_proj) instead of going through linear_apply."""
+    x_proj/dt_proj, the MoE expert banks) instead of going through
+    linear_apply. PlannedWeights that kept their float weights (CIM
+    plans) read those back exactly."""
+    if isinstance(w, PlannedWeights):
+        return w.best_weights(dtype)
     if isinstance(w, dict):
         return dequantize_weight(w, dtype)
     return w.astype(dtype)
 
 
-def _eligible(key: str, leaf) -> bool:
-    return (
-        key == "w" or key in ("gate", "up", "down")
-    ) and hasattr(leaf, "ndim") and leaf.ndim >= _QUANT_MIN_DIM
-
-
 def quantize_params_for_serving(params: Any) -> Any:
-    """Rewrite matmul weights to int8 codes + scales (pure function).
+    """Rewrite matmul weights to int8 PlannedWeights (pure function).
 
     Works on concrete arrays AND on ShapeDtypeStruct trees (dry-run):
     for SDS inputs the 'values' are shape/dtype stand-ins only.
     """
-
-    def walk(node):
-        if not isinstance(node, dict):
-            return node
-        out = {}
-        for k, v in node.items():
-            if isinstance(v, dict):
-                out[k] = v if k in _EXEMPT_MODULES else walk(v)
-            elif k in _EXEMPT_KEYS or not _eligible(k, v):
-                out[k] = v
-            elif isinstance(v, jax.ShapeDtypeStruct):
-                out[k] = {
-                    "w_q": jax.ShapeDtypeStruct(v.shape, jnp.int8),
-                    "w_s": jax.ShapeDtypeStruct(
-                        v.shape[:-2] + (1,) + v.shape[-1:], jnp.float32),
-                }
-            else:
-                out[k] = _quantize_leaf(v)
-        return out
-
-    return walk(params)
+    return engine.plan_params(params, keep_fp=False, with_planes=False)
 
 
 def quantize_axes_for_serving(axes: Any) -> Any:
     """Matching transform on the logical-axes tree (sharding specs):
-    codes inherit the weight's axes; scales keep the out-channel axis."""
-
-    def walk(node):
-        if not isinstance(node, dict):
-            return node
-        out = {}
-        for k, v in node.items():
-            if isinstance(v, dict):
-                out[k] = v if k in _EXEMPT_MODULES else walk(v)
-            elif (k == "w" or k in ("gate", "up", "down")) and \
-                    isinstance(v, tuple) and len(v) >= _QUANT_MIN_DIM:
-                out[k] = {
-                    "w_q": v,
-                    "w_s": v[:-2] + (None,) + v[-1:],
-                }
-            else:
-                out[k] = v
-        return out
-
-    return walk(axes)
+    codes inherit the weight's axes; the [.., 1, N] epilogue vectors
+    (scale, colsum) keep the out-channel axis."""
+    return engine.planned_axes(axes, keep_fp=False)

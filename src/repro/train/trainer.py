@@ -218,6 +218,19 @@ class Trainer:
         self.ckpt.wait()
         return self.history
 
+    def planned_params(self, policy=None):
+        """Weight-stationary export of the current params for serving.
+
+        Runs core.engine.plan_params over the live training params:
+        the train->serve handoff that turns per-step QAT weights into
+        the precomputed codes/colsums/scales ServeEngine reuses across
+        every decode step. policy=None exports the digital int8
+        weight-only form.
+        """
+        from repro.core import engine as cim_engine
+
+        return cim_engine.plan_params(self.state.params, policy=policy)
+
     def final_checkpoint(self):
         if self.cfg.checkpoint_dir:
             self.ckpt.save(

@@ -1,0 +1,241 @@
+"""Plan/execute engine: bit-exact parity with the one-shot shim, plan
+reuse, backend registry, whole-pytree planning, planned serving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CIMPolicy, get_config
+from repro.core import engine, matmul
+from repro.core.params import PAPER_OP_16ROWS
+from repro.models import resnet, transformer
+from repro.serve.engine import ServeEngine
+
+RNG = np.random.default_rng(11)
+ALL_MODES = ["fp", "cim-exact", "cim", "cim-kernel"]
+
+
+def rand_xw(m=8, k=64, n=8):
+    x = jnp.asarray(RNG.normal(size=(m, k)).clip(-3, 3), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)) * 0.1, jnp.float32)
+    return x, w
+
+
+class TestShimEquivalence:
+    """The deprecated cim_matmul shim is bit-exact with plan+execute."""
+
+    @pytest.mark.parametrize("mode", ALL_MODES)
+    def test_oneshot_matches_plan_execute(self, mode):
+        x, w = rand_xw()
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode=mode, cim=cfg)
+        old = matmul.cim_matmul(x, w, cfg, mode=mode)
+        plan = engine.plan_weights(w, cfg, policy)
+        new = engine.execute(x, plan, policy)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    @pytest.mark.parametrize("mode", ["cim-exact", "cim"])
+    def test_asymmetric_and_clipped_acts(self, mode):
+        x, w = rand_xw()
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode=mode, cim=cfg, act_symmetric=False,
+                           act_clip_pct=0.99)
+        old = matmul.cim_matmul(x, w, cfg, mode=mode,
+                                act_clip_pct=0.99)
+        plan = engine.plan_weights(w, cfg, policy)
+        new = engine.execute(x, plan, policy)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    def test_noise_keying_identical(self):
+        x, w = rand_xw()
+        cfg = PAPER_OP_16ROWS.replace(noisy=True)
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        key = jax.random.PRNGKey(3)
+        old = matmul.cim_matmul(x, w, cfg, mode="cim", key=key)
+        plan = engine.plan_weights(w, cfg, policy)
+        new = engine.execute(x, plan, policy, key=key)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    def test_precomputed_planes_change_nothing(self):
+        x, w = rand_xw(k=96)
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        with_p = engine.plan_weights(w, cfg, policy, with_planes=True)
+        without = engine.plan_weights(w, cfg, policy, with_planes=False)
+        assert with_p.planes is not None and without.planes is None
+        np.testing.assert_array_equal(
+            np.asarray(engine.execute(x, with_p, policy)),
+            np.asarray(engine.execute(x, without, policy)),
+        )
+
+    def test_ste_gradients_unchanged(self):
+        """engine.matmul keeps the straight-through backward."""
+        x, w = rand_xw(m=3, n=2)
+        policy = CIMPolicy(mode="cim", cim=PAPER_OP_16ROWS)
+        g = jnp.asarray(RNG.normal(size=(3, 2)), jnp.float32)
+
+        def f(x, w):
+            return jnp.vdot(g, engine.matmul(x, w, policy))
+
+        gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(g @ w.T),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ g),
+                                   rtol=1e-5)
+
+
+class TestPlanReuse:
+    @pytest.mark.parametrize("mode", ["cim-exact", "cim", "cim-kernel"])
+    def test_one_plan_many_batches(self, mode):
+        """Property: executing B batches against ONE plan equals B
+        independent one-shot calls (the weight side is input-free)."""
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode=mode, cim=cfg)
+        _, w = rand_xw()
+        plan = engine.plan_weights(w, cfg, policy)
+        for m in (1, 4, 7):
+            x = jnp.asarray(RNG.normal(size=(m, 64)), jnp.float32)
+            np.testing.assert_array_equal(
+                np.asarray(engine.execute(x, plan, policy)),
+                np.asarray(matmul.cim_matmul(x, w, cfg, mode=mode)),
+            )
+
+    def test_plan_is_jit_friendly(self):
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        x, w = rand_xw()
+        plan = engine.plan_weights(w, cfg, policy)
+        jitted = jax.jit(lambda x, p: engine.execute(x, p, policy))
+        np.testing.assert_array_equal(
+            np.asarray(jitted(x, plan)),
+            np.asarray(engine.execute(x, plan, policy)),
+        )
+
+    def test_plan_storage_dtypes(self):
+        _, w = rand_xw()
+        plan = engine.plan_weights(
+            w, PAPER_OP_16ROWS, with_planes=True
+        )
+        assert plan.codes.dtype == jnp.int8  # 8-bit weight grid
+        assert plan.planes.dtype == jnp.int8
+        assert plan.scale.dtype == jnp.float32
+        assert plan.colsum.dtype == jnp.float32
+        np.testing.assert_array_equal(
+            np.asarray(plan.colsum),
+            np.asarray(jnp.sum(plan.codes_i32, axis=0, keepdims=True)),
+        )
+
+
+class TestBackendRegistry:
+    def test_builtins_registered(self):
+        names = engine.backend_names()
+        for name in ("fp", "exact", "behavioral", "pallas"):
+            assert name in names
+
+    def test_mode_aliases_resolve(self):
+        assert engine.get_backend("cim-exact") is engine.get_backend(
+            "exact")
+        assert engine.get_backend("cim") is engine.get_backend(
+            "behavioral")
+        assert engine.get_backend("cim-kernel") is engine.get_backend(
+            "pallas")
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(KeyError, match="unknown CIM backend"):
+            engine.get_backend("no-such-backend")
+
+    def test_custom_backend_dispatch(self):
+        calls = []
+
+        def fake(x2, plan, policy, key):
+            calls.append(x2.shape)
+            return jnp.zeros((x2.shape[0], plan.n), jnp.float32)
+
+        engine.register_backend("test-null", fake, overwrite=True)
+        try:
+            x, w = rand_xw()
+            policy = CIMPolicy(mode="cim", cim=PAPER_OP_16ROWS,
+                               backend="test-null")
+            plan = engine.plan_weights(w, PAPER_OP_16ROWS, policy)
+            y = engine.execute(x, plan, policy)
+            assert calls == [(8, 64)]
+            assert float(jnp.sum(jnp.abs(y))) == 0.0
+        finally:
+            engine._BACKENDS.pop("test-null", None)
+
+    def test_duplicate_registration_guard(self):
+        with pytest.raises(ValueError, match="already registered"):
+            engine.register_backend("fp", lambda *a: None)
+        with pytest.raises(ValueError, match="reserved mode alias"):
+            engine.register_backend("cim-exact", lambda *a: None)
+
+
+class TestPlanParams:
+    def test_serving_tree_halves_storage(self):
+        cfg = get_config("qwen2_0_5b", smoke=True)
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        planned = engine.plan_params(params)  # int8 serving default
+
+        def nbytes(tree):
+            return sum(
+                leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(tree)
+            )
+
+        assert nbytes(planned) < 0.55 * nbytes(params)
+
+    def test_cim_policy_keeps_fp_weights(self):
+        policy = CIMPolicy(mode="cim-exact", cim=PAPER_OP_16ROWS)
+        params = {"wq": {"w": jnp.ones((16, 8), jnp.float32)},
+                  "norm": {"scale": jnp.ones((8,))}}
+        planned = engine.plan_params(params, policy=policy)
+        assert planned["wq"]["w"].w is not None
+        assert planned["norm"]["scale"].shape == (8,)
+
+    def test_sds_tree_planning(self):
+        tree = {"w": jax.ShapeDtypeStruct((64, 16), jnp.float32)}
+        planned = engine.plan_params(tree)
+        assert planned["w"].codes.shape == (64, 16)
+        assert planned["w"].codes.dtype == jnp.int8
+        assert planned["w"].scale.shape == (1, 16)
+        # axes transform mirrors the structure
+        axes = engine.planned_axes({"w": ("embed", "mlp")})
+        s1 = jax.tree.structure(jax.tree.map(lambda _: 0, planned))
+        s2 = jax.tree.structure(jax.tree.map(
+            lambda _: 0, axes, is_leaf=lambda t: isinstance(t, tuple)))
+        assert s1 == s2
+
+
+class TestPlannedServing:
+    def test_planned_engine_identical_tokens(self):
+        """plan_params + ServeEngine decode == unplanned engine, token
+        for token (the weight side is precomputed, not re-derived)."""
+        cfg = get_config("qwen2_0_5b", smoke=True).replace(
+            cim=CIMPolicy(mode="cim-exact", cim=PAPER_OP_16ROWS)
+        )
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        prompts = jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+        base = ServeEngine(params, cfg, max_len=32, batch=2)
+        planned = ServeEngine(params, cfg, max_len=32, batch=2,
+                              plan=True)
+        t_base = base.generate(prompts, 5)
+        t_plan = planned.generate(prompts, 5)
+        np.testing.assert_array_equal(t_base, t_plan)
+
+    def test_planned_resnet_matches_unplanned(self):
+        # apply_to_stem=True so every conv goes through the macro path
+        # in both trees; the exempt-stem fp path differs by im2col-vs-
+        # lax.conv float association (~1e-7 rel), not by semantics.
+        rcfg = resnet.ResNetConfig(
+            widths=(8, 16), blocks_per_stage=1,
+            cim=CIMPolicy(mode="cim-exact", cim=PAPER_OP_16ROWS,
+                          act_symmetric=True, apply_to_stem=True),
+        )
+        params, bn = resnet.init(jax.random.PRNGKey(0), rcfg)
+        planned = resnet.plan_params(params, rcfg.cim)
+        x = jnp.asarray(RNG.normal(size=(2, 32, 32, 3)), jnp.float32)
+        y0, _ = resnet.forward(params, bn, x, rcfg)
+        y1, _ = resnet.forward(planned, bn, x, rcfg)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))

@@ -3,7 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install .[test]"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import adc, dac, matmul, quant
 from repro.core.params import PAPER_OP_16ROWS, CIMConfig

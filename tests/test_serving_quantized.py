@@ -1,4 +1,9 @@
-"""int8 weight-only serving: transform correctness + end-to-end."""
+"""int8 weight-only serving: transform correctness + end-to-end.
+
+Since the plan/execute redesign the serving representation is
+core.engine.PlannedWeights (codes/scale) rather than the old ad-hoc
+{'w_q','w_s'} dicts; the legacy dict form stays readable.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -6,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
+from repro.core.engine import PlannedWeights
 from repro.models import transformer
 from repro.serve import quantized as sq
 
@@ -14,10 +20,26 @@ def test_leaf_quantization_error_bounded():
     w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 16)),
                     jnp.float32)
     q = sq._quantize_leaf(w)
-    assert q["w_q"].dtype == jnp.int8
+    assert q.codes.dtype == jnp.int8
+    assert q.w is None  # serving form drops the float weights
     back = np.asarray(sq.dequantize_weight(q, jnp.float32))
-    step = np.asarray(q["w_s"])[0]
+    step = np.asarray(q.scale)[0]
     assert np.all(np.abs(back - np.asarray(w)) <= step * 0.5 + 1e-7)
+
+
+def test_legacy_dict_form_still_reads():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)),
+                    jnp.float32)
+    q = sq._quantize_leaf(w)
+    legacy = {"w_q": q.codes, "w_s": q.scale}
+    np.testing.assert_array_equal(
+        np.asarray(sq.dequantize_weight(legacy, jnp.float32)),
+        np.asarray(q.dequantized(jnp.float32)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sq.maybe_dequant(legacy, jnp.float32)),
+        np.asarray(sq.maybe_dequant(q, jnp.float32)),
+    )
 
 
 def test_transform_structure_and_exemptions():
@@ -26,17 +48,18 @@ def test_transform_structure_and_exemptions():
     qp = sq.quantize_params_for_serving(params)
     # embeddings/norms untouched
     assert qp["embed"]["table"].dtype == params["embed"]["table"].dtype
-    # a linear got codes+scales
+    # a linear got a weight plan (codes + scales)
     unit = qp["units"]["layer_00"]
-    assert set(unit["attn"]["wq"]["w"].keys()) == {"w_q", "w_s"}
-    assert unit["attn"]["wq"]["w"]["w_q"].dtype == jnp.int8
+    wq = unit["attn"]["wq"]["w"]
+    assert isinstance(wq, PlannedWeights)
+    assert wq.codes.dtype == jnp.int8
     # MoE banks quantized with per-channel scale keeping expert dim
     moe = unit["moe"]
     # scanned units stack a leading layers dim onto the [E, K, N] bank
-    assert moe["gate"]["w_q"].ndim == 4
-    assert moe["gate"]["w_s"].shape[-2] == 1
+    assert moe["gate"].codes.ndim == 4
+    assert moe["gate"].scale.shape[-2] == 1
     # the router stays high-precision by design
-    assert not isinstance(moe["router"]["w"], dict)
+    assert not isinstance(moe["router"]["w"], PlannedWeights)
     # biases untouched
     assert unit["attn"]["wq"]["b"].dtype != jnp.int8
 
