@@ -88,7 +88,7 @@ def main(quick: bool = False) -> None:
     )
 
 
-def planned_main(quick: bool = False) -> None:
+def planned_main(quick: bool = False, smoke: bool = False) -> None:
     """Planned vs. unplanned decode-shape matmul latency.
 
     The decode hot path is small-M (a handful of in-flight tokens)
@@ -96,11 +96,14 @@ def planned_main(quick: bool = False) -> None:
     transforms (quantize + colsum + bit-slice) the old one-shot API
     paid are the dominant avoidable cost. The plan/execute split
     removes them; this tracks the number.
+
+    ``smoke`` (scripts/check.sh) shrinks shapes/reps to CI scale — the
+    point there is exercising plan/execute end to end, not the timing.
     """
     cfg = PAPER_OP_16ROWS
     rng = np.random.default_rng(0)
     m = 8  # decode: one token per in-flight request
-    k = n = 256 if quick else 1024
+    k = n = 128 if smoke else (256 if quick else 1024)
     x = jnp.asarray(rng.normal(size=(m, k)).clip(-3, 3), jnp.float32)
     w = jnp.asarray(rng.normal(size=(k, n)) * 0.1, jnp.float32)
 
@@ -112,7 +115,7 @@ def planned_main(quick: bool = False) -> None:
 
         y0 = jax.block_until_ready(oneshot(x, w))
         y1 = jax.block_until_ready(planned(x, plan))
-        reps = 5 if quick else 20
+        reps = 2 if smoke else (5 if quick else 20)
         with Timer() as t_un:
             for _ in range(reps):
                 jax.block_until_ready(oneshot(x, w))

@@ -2,10 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 ``--full`` runs the paper-fidelity sample counts (10K Monte-Carlo,
-512-image evals, full sweep grids); default is the quick profile.
+512-image evals, full sweep grids); default is the quick profile;
+``--smoke`` shrinks further to CI scale (scripts/check.sh runs
+``--only plan --smoke`` so the plan/execute path stays exercised in
+tier-1 without the benchmark cost).
 """
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -37,16 +41,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-fidelity sample counts (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale shapes/reps (implies quick)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     names = args.only.split(",") if args.only else list(ALL)
     quick = not args.full
     failed = []
     for name in names:
         print(f"# --- {name} ---", flush=True)
         try:
-            ALL[name](quick=quick)
+            fn = ALL[name]
+            kwargs = {"quick": quick}
+            if "smoke" in inspect.signature(fn).parameters:
+                kwargs["smoke"] = args.smoke
+            fn(**kwargs)
         except Exception:  # noqa: BLE001 - keep the harness running
             failed.append(name)
             traceback.print_exc()

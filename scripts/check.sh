@@ -2,6 +2,14 @@
 # Tier-1 verify with base deps only: the suite must collect and pass
 # without the optional extras (zstandard, hypothesis) — optional-dep
 # imports are gated in-tree, and this is the command CI runs.
+#
+# Tests marked @pytest.mark.slow (long-grid calibration sweeps, full
+# benchmark-scale evals) are deselected by default via pyproject's
+# addopts; run them explicitly with:  pytest -m slow
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# Smoke the plan/execute benchmark path end to end (CI-scale shapes):
+# catches engine/backends regressions the unit tests abstract over.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/run.py --only plan --smoke

@@ -115,9 +115,14 @@ def _np_dtype(name: str) -> np.dtype:
 def _path_name(path) -> str:
     parts = []
     for p in path:
-        if hasattr(p, "key"):
+        if hasattr(p, "key"):  # DictKey
             parts.append(str(p.key))
-        elif hasattr(p, "idx"):
+        elif hasattr(p, "name"):  # GetAttrKey: registered dataclasses
+            # (engine.PlannedWeights, resnet.PlannedConv) flatten with
+            # attribute paths; str(GetAttrKey) is ".field" — strip the
+            # dot so planned-tree tensor names stay flat ("w/codes").
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):  # SequenceKey
             parts.append(str(p.idx))
         else:
             parts.append(str(p))

@@ -33,6 +33,23 @@ Quickstart (see docs/api.md for more):
     y0 = execute(x0, plan, policy)               # per batch
     y1 = execute(x1, plan, policy)
 
+The analog side is a composable pipeline (core.pipeline): typed stages
+(DACStage -> AMUStage -> ADCStage -> ShiftAddStage) over a declarative
+MacroSpec; core.calibrate sweeps (adc_bits, rows_active, coarse/fine
+split) per layer — the paper's Sec. IV hardware-aware co-design — and
+registers the result as an execution backend:
+
+    from repro.core import default_pipeline
+    from repro.core.calibrate import calibrate
+
+    result = calibrate(default_pipeline(), weights, acts)
+    result.register("analog")
+    policy = CIMPolicy(mode="cim", backend="analog", cim=policy.cim)
+
+(Like ``engine.matmul``, the bare ``calibrate`` function is not
+re-exported at package level — the name would shadow the
+``core.calibrate`` submodule attribute.)
+
 Also exported:
   CIMConfig            -- macro operating point (paper defaults)
   cim_matmul           -- DEPRECATED one-shot shim over plan/execute
@@ -78,6 +95,18 @@ from repro.core.engine import (
     quantized_backend,
     register_backend,
 )
+# NOTE: the bare ``calibrate`` function is deliberately NOT re-exported
+# here — the name would shadow the core.calibrate submodule attribute;
+# reach it as ``from repro.core.calibrate import calibrate``.
+from repro.core.calibrate import (
+    CalibrationGrid,
+    CalibrationResult,
+    LayerCalibration,
+    adc_code_table,
+    calibrate_resnet,
+    calibrated_backend,
+    hw_cost,
+)
 from repro.core.macro import MacroOut, macro_op, macro_op_reference_digital
 from repro.core.matmul import (
     CIMMode,
@@ -87,6 +116,23 @@ from repro.core.matmul import (
     cim_matmul_ste,
 )
 from repro.core.params import PAPER_OP_8ROWS, PAPER_OP_16ROWS, CIMConfig
+from repro.core.pipeline import (
+    ADCSpec,
+    ADCStage,
+    AMUSpec,
+    AMUStage,
+    AnalogPipeline,
+    DACSpec,
+    DACStage,
+    MacroSpec,
+    MacroState,
+    PAPER_MACRO_8ROWS,
+    PAPER_MACRO_16ROWS,
+    ShiftAddStage,
+    Stage,
+    default_pipeline,
+    default_stages,
+)
 from repro.core.quant import (
     QuantizedActs,
     QuantizedWeights,
@@ -102,17 +148,34 @@ from repro.core.quant import (
 )
 
 __all__ = [
+    "ADCSpec",
+    "ADCStage",
+    "AMUSpec",
+    "AMUStage",
+    "AnalogPipeline",
     "CIMConfig",
     "CIMMode",
+    "CalibrationGrid",
+    "CalibrationResult",
+    "DACSpec",
+    "DACStage",
+    "LayerCalibration",
     "MacroEnergyReport",
     "MacroOut",
+    "MacroSpec",
+    "MacroState",
+    "PAPER_MACRO_16ROWS",
+    "PAPER_MACRO_8ROWS",
     "PAPER_OP_16ROWS",
     "PAPER_OP_8ROWS",
     "PlannedWeights",
     "QuantizedActs",
     "QuantizedWeights",
+    "ShiftAddStage",
+    "Stage",
     "abl_voltage_from_pmac",
     "accumulate_abl",
+    "adc_code_table",
     "adc_dequant",
     "adc_energy_comparison",
     "adc_flat_flash",
@@ -120,15 +183,20 @@ __all__ = [
     "adc_transfer_int",
     "backend_names",
     "bitslice_weights",
+    "calibrate_resnet",
+    "calibrated_backend",
     "cim_matmul",
     "cim_matmul_exact_int",
     "cim_matmul_int",
     "cim_matmul_ste",
     "dac_voltage",
+    "default_pipeline",
+    "default_stages",
     "dequantize_acts",
     "dequantize_weights",
     "energy_per_cycle_j",
     "execute",
+    "hw_cost",
     "fake_quant_acts",
     "fake_quant_weights",
     "frequency_mhz",

@@ -43,25 +43,61 @@ def reference_input_code(cfg: CIMConfig) -> int:
     return int(round(step))
 
 
+def reference_patterns(cfg: CIMConfig) -> list[list[int]]:
+    """Per-level AMU_REF programming: the iBL input code of each of the
+    ``rows_per_group`` local arrays, with sum(codes) = N * adc_step.
+
+    The paper's scheme drives every array with the same code
+    (pattern '1000' = step) and stores '1' in N of them — used verbatim
+    whenever it fits (step <= act_max and N <= rows_per_group, true at
+    the paper's operating points; the returned row is then
+    ``[step]*N + [0]*rest``, and a code-0 row is charge-identical to an
+    unprogrammed one). Because each local array has its *own* iBL DAC,
+    other grid points reprogram with heterogeneous per-row codes —
+    greedy act_max-first fill — so any level with
+    N*step <= rows_per_group*act_max lands the exact charge ratio
+    (e.g. 5-bit @ 16 rows, level 17: pMAC 68 = 15*4 + 8). Raises only
+    when a level exceeds that bound (more reference charge than the
+    arrays can sink, e.g. cutoff 0 at full resolution) — structurally
+    infeasible for in-SRAM references, which the calibration sweep
+    treats as ineligible.
+    """
+    step = reference_input_code(cfg)
+    rows = cfg.rows_per_group
+    patterns: list[list[int]] = []
+    for n_level in range(cfg.adc_codes):
+        target = n_level * step
+        if target > rows * cfg.act_max:
+            raise ValueError(
+                f"reference level pMAC={target} not representable: "
+                f"exceeds {rows} arrays x act_max={cfg.act_max}"
+            )
+        if step <= cfg.act_max and n_level <= rows:
+            row = [step] * n_level  # the paper's homogeneous pattern
+        else:
+            q, r = divmod(target, cfg.act_max)
+            row = [cfg.act_max] * q + ([r] if r else [])
+        patterns.append(row + [0] * (rows - len(row)))
+    return patterns
+
+
 def reference_voltages(cfg: CIMConfig) -> jax.Array:
     """V_REF[N] for N = 0..(2**adc_bits - 1), via the AMU_REF pipeline.
 
-    Generated structurally: N local arrays store '1' (preserving the
-    reference DAC voltage), 16-N store '0' (CBL pulled to VDD), then ABL
-    charge sharing -- identical code path to the compute columns, so any
-    common-mode effect (kappa, VDD) cancels in the comparison.
+    Generated structurally per level: each local array DA-converts its
+    own reference iBL code, arrays with a nonzero code store '1' (the
+    rest '0': CBL pulled to VDD), then ABL charge sharing -- identical
+    code path to the compute columns, so any common-mode effect (kappa,
+    VDD) cancels in the comparison. Level programming comes from
+    :func:`reference_patterns` (the paper's fixed '1000' pattern at its
+    operating points, heterogeneous per-row codes elsewhere).
     """
-    code = reference_input_code(cfg)
-    n_codes = cfg.adc_codes
-    n_rows = cfg.rows_per_group
-    v_dac = dac.dac_voltage(jnp.asarray(code, dtype=jnp.int32), cfg)
-    # stored[N, j] = 1 for j < N  (N cells keep V_DAC, rest go to VDD)
-    rows = jnp.arange(n_rows)[None, :]
-    counts = jnp.arange(n_codes)[:, None]
-    stored = (rows < counts).astype(jnp.float32)  # [n_codes, 16]
-    v_cbl = dac.multiply_bitcell(
-        jnp.broadcast_to(v_dac, stored.shape), stored, cfg
-    )
+    patterns = jnp.asarray(reference_patterns(cfg), dtype=jnp.int32)
+    v_dac = dac.dac_voltage(patterns, cfg)  # [n_codes, rows]
+    # code-0 rows are charge-identical either way (V_DAC(0) = VDD);
+    # storing '0' there matches the paper's partially-programmed column.
+    stored = (patterns > 0).astype(jnp.float32)
+    v_cbl = dac.multiply_bitcell(v_dac, stored, cfg)
     return dac.accumulate_abl(v_cbl, cfg)  # [n_codes]
 
 
@@ -70,14 +106,29 @@ def adc_read_voltage(
     cfg: CIMConfig,
     *,
     key: jax.Array | None = None,
+    coarse_bits: int | None = None,
 ) -> jax.Array:
     """Coarse-fine comparator readout of an ABL voltage -> 4-bit code.
 
     Comparator semantics: code = #{N >= 1 : V_ABL <= V_REF[N]}
-    (lower voltage = larger pMAC). Implemented as the coarse/fine
-    decomposition of Fig. 6(b); both produce identical codes, which the
-    tests assert against the flat 15-comparator flash.
+    (lower voltage = larger pMAC), decomposed into a segmented readout:
+    ``coarse_bits`` of segment index from the ``2**coarse_bits - 1``
+    segment-boundary comparators, then the remaining fine bits from the
+    ``2**(bits - coarse_bits) - 1`` comparators inside the selected
+    segment — Fig. 6(b) is the split-1 instance (1 coarse + 3-bit fine,
+    8 comparators vs 15 flat). Every split produces identical codes
+    (asserted against the flat flash in the tests); the split only
+    changes the comparator count, i.e. hardware cost.
+
+    ``coarse_bits=None`` reads the split from the operating point
+    (``cfg.adc_coarse_bits``, default 1 = the paper's readout).
     """
+    if coarse_bits is None:
+        coarse_bits = getattr(cfg, "adc_coarse_bits", 1)
+    if not (0 <= coarse_bits <= cfg.adc_bits):
+        raise ValueError(
+            f"coarse_bits={coarse_bits} out of range [0, {cfg.adc_bits}]"
+        )
     vrefs = reference_voltages(cfg)  # [2**bits], decreasing in N
     # Deterministic tie-break at exact reference crossings: a real
     # comparator is metastable at equality; we resolve ties toward
@@ -93,16 +144,22 @@ def adc_read_voltage(
     else:
         offs = jnp.zeros(v_abl.shape + (vrefs.shape[0],))
 
-    half = cfg.adc_codes // 2
-    cmp_all = v_abl[..., None] <= (vrefs + offs + eps)  # [..., 16]
+    fine_codes = 1 << (cfg.adc_bits - coarse_bits)
+    cmp_all = v_abl[..., None] <= (vrefs + offs + eps)  # [..., 2**bits]
 
-    # Coarse: MSB = V_ABL <= V_REF[half]  (pMAC >= 64)
-    msb = cmp_all[..., half]
-    # Fine: 7 comparators on the selected half.
-    lo_codes = jnp.sum(cmp_all[..., 1:half], axis=-1)
-    hi_codes = half + jnp.sum(cmp_all[..., half + 1 :], axis=-1)
-    code = jnp.where(msb, hi_codes, lo_codes).astype(jnp.int32)
-    return code
+    # Coarse: segment index from the boundary comparators at
+    # N = fine_codes, 2*fine_codes, ... ((2**coarse)-1)*fine_codes.
+    boundaries = fine_codes * jnp.arange(1, 1 << coarse_bits)
+    seg = jnp.sum(cmp_all[..., boundaries].astype(jnp.int32), axis=-1)
+    base = seg * fine_codes
+    # Fine: fine_codes-1 comparators inside the selected segment.
+    offsets = jnp.arange(1, fine_codes)
+    idx = base[..., None] + offsets  # [..., fine_codes-1]
+    fine = jnp.sum(
+        jnp.take_along_axis(cmp_all, idx, axis=-1).astype(jnp.int32),
+        axis=-1,
+    )
+    return (base + fine).astype(jnp.int32)
 
 
 def adc_flat_flash(v_abl: jax.Array, cfg: CIMConfig) -> jax.Array:

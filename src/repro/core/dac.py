@@ -14,17 +14,32 @@ value(V_DAC) = X and V = VDD encodes 0.
 This module exists for faithfulness validation (tests + Monte-Carlo
 figures). The scaled behavioral path in matmul.py is proven equivalent
 when noise is disabled.
+
+Every function takes the operating point by attribute access only, so
+``cfg`` may be a flat ``CIMConfig`` or a declarative
+``core.pipeline.MacroSpec`` (the pipeline stages pass the latter); the
+``OpPoint`` alias documents that. MacroSpec itself imports this module,
+so the alias stays a string annotation.
 """
 
 from __future__ import annotations
+
+from typing import TYPE_CHECKING, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.params import CIMConfig
 
+if TYPE_CHECKING:  # pragma: no cover - import cycle: pipeline uses dac
+    from repro.core.pipeline import MacroSpec
 
-def cap_states(x_code: jax.Array, cfg: CIMConfig) -> jax.Array:
+    OpPoint = Union[CIMConfig, "MacroSpec"]
+else:
+    OpPoint = CIMConfig
+
+
+def cap_states(x_code: jax.Array, cfg: OpPoint) -> jax.Array:
     """Per-capacitor post-evaluation voltages, in units of VDD.
 
     x_code: integer array of 4-bit codes, any shape [...].
@@ -53,7 +68,7 @@ def cap_states(x_code: jax.Array, cfg: CIMConfig) -> jax.Array:
 
 def dac_voltage(
     x_code: jax.Array,
-    cfg: CIMConfig,
+    cfg: OpPoint,
     *,
     key: jax.Array | None = None,
 ) -> jax.Array:
@@ -71,12 +86,12 @@ def dac_voltage(
     return v
 
 
-def dac_value(v: jax.Array, cfg: CIMConfig) -> jax.Array:
+def dac_value(v: jax.Array, cfg: OpPoint) -> jax.Array:
     """Map a CBL voltage back to the value domain: 16 * (1 - V/VDD)."""
     return cfg.rows_per_group * (1.0 - v / cfg.vdd)
 
 
-def multiply_bitcell(v_cbl: jax.Array, w_bit: jax.Array, cfg: CIMConfig) -> jax.Array:
+def multiply_bitcell(v_cbl: jax.Array, w_bit: jax.Array, cfg: OpPoint) -> jax.Array:
     """P-8T multiplication phase (Fig. 3c / Fig. 4 truth table).
 
     w=1: P0 off, CBL preserves V_DAC.  w=0: P0 on, CBL charged to VDD
@@ -88,7 +103,7 @@ def multiply_bitcell(v_cbl: jax.Array, w_bit: jax.Array, cfg: CIMConfig) -> jax.
 
 def accumulate_abl(
     v_cbls: jax.Array,
-    cfg: CIMConfig,
+    cfg: OpPoint,
     *,
     key: jax.Array | None = None,
 ) -> jax.Array:
@@ -109,10 +124,10 @@ def accumulate_abl(
     return v
 
 
-def abl_voltage_from_pmac(pmac: jax.Array, cfg: CIMConfig) -> jax.Array:
+def abl_voltage_from_pmac(pmac: jax.Array, cfg: OpPoint) -> jax.Array:
     """Ideal equation of Fig. 5(b): V_ABL = VDD * (1 - pMAC/denom)."""
     return cfg.vdd * (1.0 - pmac / cfg.share_denom)
 
 
-def pmac_from_abl_voltage(v_abl: jax.Array, cfg: CIMConfig) -> jax.Array:
+def pmac_from_abl_voltage(v_abl: jax.Array, cfg: OpPoint) -> jax.Array:
     return (1.0 - v_abl / cfg.vdd) * cfg.share_denom

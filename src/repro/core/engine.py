@@ -93,11 +93,17 @@ class PlannedWeights:
       colsum:  [..., 1, N] f32 per-column sum of codes (zero-point fix).
       w:       original full-precision weights, kept when the plan must
                also serve non-CIM (fp / digitally-exempt) matmuls.
-      planes:  [G, B, rows_active, N] int8 two's-complement bit planes,
-               pre-grouped into the macro's row-group layout (zero-
-               padded along K) so execute does no per-call weight-side
-               reshaping. Kept when the behavioral backend will run
-               repeatedly on this plan.
+      planes:  pre-grouped bit planes in the macro's row-group layout
+               (zero-padded along K) so execute does no per-call
+               weight-side reshaping. Two storage forms:
+                 * unpacked [G, B, rows_active, N] int8 0/1 planes;
+                 * packed   [G, rows_active, N] uint8 — 8 planes/byte
+                   (bit b of each byte is plane b), chosen for large-K
+                   layers where the unpacked form costs B extra bytes
+                   per weight; the behavioral kernel unpacks one group
+                   tile at a time inside its scan.
+               Kept when the behavioral backend will run repeatedly on
+               this plan.
       weight_bits: static weight precision (pytree metadata).
     """
 
@@ -134,22 +140,55 @@ class PlannedWeights:
         return self.dequantized(dtype)
 
 
+# Above this reduction depth the behavioral planes are stored bit-packed
+# (8 planes/byte): at K = 4096 the unpacked [G, B, rows, N] int8 form is
+# weight_bits x the codes themselves, which dominates plan storage for
+# the large-K layers (MLP down-projections, im2col stacks).
+PACK_PLANES_MIN_K = 4096
+
+
+def _pack_planes_default(k: int, cfg: CIMConfig) -> bool:
+    return k >= PACK_PLANES_MIN_K and cfg.weight_bits <= 8
+
+
 def _grouped_planes_shape(
-    k: int, n: int, cfg: CIMConfig
-) -> tuple[int, int, int, int]:
+    k: int, n: int, cfg: CIMConfig, packed: bool = False
+) -> tuple[int, ...]:
     rows = cfg.rows_active
+    if packed:
+        return (-(-k // rows), rows, n)
     return (-(-k // rows), cfg.weight_bits, rows, n)
 
 
-def _grouped_planes(codes: jax.Array, cfg: CIMConfig) -> jax.Array:
-    """[K, N] signed codes -> [G, B, rows, N] int8 bit planes.
+def _grouped_planes(
+    codes: jax.Array, cfg: CIMConfig, packed: bool = False
+) -> jax.Array:
+    """[K, N] signed codes -> grouped bit planes.
 
     The macro's row-group layout: group g holds rows g*rows..(g+1)*rows
     of every bit plane, zero-padded along K (bit planes of code 0 are
     all 0, so padding is neutral — tested in test_cim_matmul).
+
+    packed=False: [G, B, rows, N] int8 0/1 planes.
+    packed=True:  [G, rows, N] uint8 with 8 planes/byte — bit b of each
+    byte is plane b, i.e. the low ``weight_bits`` two's-complement bits
+    of the code; the behavioral kernel bit-slices one [rows, N] tile per
+    scan step, so peak memory never sees the unpacked tensor.
     """
     k, n = codes.shape
-    g, b, rows, _ = _grouped_planes_shape(k, n, cfg)
+    rows = cfg.rows_active
+    g = -(-k // rows)
+    if packed:
+        if cfg.weight_bits > 8:
+            raise ValueError(
+                f"pack_planes requires weight_bits <= 8 (one byte per "
+                f"weight); got {cfg.weight_bits}"
+            )
+        mask = (1 << cfg.weight_bits) - 1
+        u = jnp.bitwise_and(codes.astype(jnp.int32), mask).astype(jnp.uint8)
+        u = jnp.pad(u, ((0, g * rows - k), (0, 0)))
+        return u.reshape(g, rows, n)
+    b = cfg.weight_bits
     p = quant.bitslice_weights(codes, b, dtype=jnp.int8)  # [B, K, N]
     p = jnp.pad(p, ((0, 0), (0, g * rows - k), (0, 0)))
     return p.reshape(b, g, rows, n).transpose(1, 0, 2, 3)
@@ -162,6 +201,7 @@ def plan_weights(
     *,
     keep_fp: bool | None = None,
     with_planes: bool | None = None,
+    pack_planes: bool | None = None,
 ) -> PlannedWeights:
     """Precompute the weight-stationary state for ``execute``.
 
@@ -181,6 +221,11 @@ def plan_weights(
       with_planes: precompute the bit-sliced planes (saves per-call
         slicing in the behavioral backend). Default: only when the
         policy's mode is the behavioral model.
+      pack_planes: store the planes bit-packed 8/byte ([G, rows, N]
+        uint8, unpacked tile-by-tile inside the behavioral kernel)
+        instead of unpacked [G, B, rows, N] int8. Default: packed for
+        large-K layers (K >= PACK_PLANES_MIN_K). Execution output is
+        identical either way (parity-tested).
     """
     if cfg is None:
         cfg = policy.cim if policy is not None else CIMConfig()
@@ -203,7 +248,9 @@ def plan_weights(
                 "with_planes requires a 2-D [K, N] weight; got shape "
                 f"{qw.codes.shape}"
             )
-        planes = _grouped_planes(qw.codes, cfg)
+        if pack_planes is None:
+            pack_planes = _pack_planes_default(qw.codes.shape[0], cfg)
+        planes = _grouped_planes(qw.codes, cfg, packed=pack_planes)
     return PlannedWeights(
         codes=codes,
         scale=qw.scale.astype(jnp.float32),
@@ -428,8 +475,10 @@ def _plan_sds_leaf(
     epi = v.shape[:-2] + (1,) + v.shape[-1:]
     planes = None
     if with_planes:
+        packed = _pack_planes_default(v.shape[-2], cfg)
         planes = jax.ShapeDtypeStruct(
-            _grouped_planes_shape(v.shape[-2], v.shape[-1], cfg), jnp.int8
+            _grouped_planes_shape(v.shape[-2], v.shape[-1], cfg, packed),
+            jnp.uint8 if packed else jnp.int8,
         )
     return PlannedWeights(
         codes=jax.ShapeDtypeStruct(v.shape, cfg.codes_dtype),

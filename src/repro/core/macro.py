@@ -8,8 +8,12 @@ One macro cycle (paper Fig. 4 / Fig. 5):
   ADC     -> 4-bit coarse-fine flash against AMU_REF references
   Shift-add (digital) -> recombine 8 bit-planes into 8 outputs
 
-This module is the ground-truth oracle for the behavioral/integer model
-in matmul.py and the Pallas kernel; it is deliberately unoptimized.
+``macro_op`` is a thin composition of the default AnalogPipeline stages
+(core.pipeline); ``_macro_op_oracle`` preserves the pre-refactor
+monolithic implementation verbatim as the ground truth the pipeline is
+asserted bit-exact against (tests/test_pipeline.py). Both remain the
+oracle for the behavioral/integer model in matmul.py and the Pallas
+kernel; they are deliberately unoptimized.
 """
 
 from __future__ import annotations
@@ -19,8 +23,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import adc, dac, quant
+from repro.core import adc, dac, pipeline as pipeline_lib, quant
 from repro.core.params import CIMConfig
+from repro.core.pipeline import AnalogPipeline, MacroSpec
 
 
 class MacroOut(NamedTuple):
@@ -33,9 +38,10 @@ class MacroOut(NamedTuple):
 def macro_op(
     x_codes: jax.Array,
     w_codes: jax.Array,
-    cfg: CIMConfig,
+    cfg: CIMConfig | MacroSpec,
     *,
     key: jax.Array | None = None,
+    pipeline: AnalogPipeline | None = None,
 ) -> MacroOut:
     """Run one macro cycle in the voltage domain.
 
@@ -45,16 +51,37 @@ def macro_op(
       w_codes: [rows_per_group, n_outputs] signed int weight codes
         (weight_bits wide); bit-sliced internally across columns exactly
         as the 64 weight columns of the macro.
-      cfg: operating point.
+      cfg: operating point (CIMConfig or declarative MacroSpec).
       key: PRNG key enabling hardware-error injection when cfg.noisy.
+      pipeline: stage composition to run; default is the paper's macro
+        (DAC -> AMU -> ADC -> shift-add), bit-exact with the
+        pre-refactor oracle.
 
     Returns MacroOut with digital outputs = sum_b sign_b 2^b dequant(code_b)
     summed in the digital shift-adder.
     """
+    pipe = pipeline if pipeline is not None else pipeline_lib.default_pipeline()
+    state = pipe.run(x_codes, w_codes, cfg, key=key)
+    return MacroOut(
+        outputs=state.outputs,
+        adc_codes=state.adc_codes,
+        v_abl=state.v_abl,
+        pmac_ideal=state.pmac_ideal,
+    )
+
+
+def _macro_op_oracle(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    key: jax.Array | None = None,
+) -> MacroOut:
+    """Pre-refactor monolithic macro cycle — kept verbatim as the oracle
+    the default AnalogPipeline must match bit-for-bit (tested)."""
     n = cfg.rows_per_group
     if x_codes.shape != (n,):
         raise ValueError(f"x_codes must be [{n}], got {x_codes.shape}")
-    n_out = w_codes.shape[-1]
 
     # Mask inactive rows (their local arrays are not activated -> their
     # CBLs stay at VDD = value 0, equivalent to x=0).

@@ -57,9 +57,12 @@ def cim_matmul_int(
       cfg: macro operating point (rows_active = group size).
       key: PRNG key for hardware-error injection when cfg.noisy.
       planes: optional precomputed bit planes in the grouped layout
-        [G, weight_bits, rows_active, N] produced by
-        core.engine.plan_weights (zero-padded along K); when given, the
-        per-call bit-slicing AND group-reshaping are both skipped.
+        produced by core.engine.plan_weights (zero-padded along K):
+        either unpacked [G, weight_bits, rows_active, N] 0/1 planes
+        (per-call bit-slicing AND group-reshaping both skipped) or
+        bit-packed [G, rows_active, N] uint8 with 8 planes/byte
+        (group-reshaping skipped; one [rows, N] tile is bit-sliced per
+        scan step, so the full unpacked tensor never materializes).
         Values must equal the bit planes of w_codes.
 
     Returns [M, N] float32: sum over groups/bit-planes of the dequantized
@@ -110,6 +113,17 @@ def cim_matmul_int(
             return group_contrib(acc, gi, xg, quant.bitslice_weights(wg, b))
 
         xs = (jnp.arange(g, dtype=jnp.uint32), x_g, w_g)
+    elif planes.ndim == 3:
+        # Bit-packed weight-stationary path (large-K plans): planes are
+        # [G, rows, N] uint8, 8 planes/byte; unpack one group tile per
+        # scan step so peak memory stays [B, rows, N].
+        assert planes.shape == (g, rows, n), (planes.shape, (g, rows, n))
+
+        def body(acc, inputs):
+            gi, xg, pg = inputs
+            return group_contrib(acc, gi, xg, quant.bitslice_weights(pg, b))
+
+        xs = (jnp.arange(g, dtype=jnp.uint32), x_g, planes)
     else:
         # Weight-stationary path: planes were sliced AND grouped once at
         # plan time — no per-call weight-side work at all.

@@ -5,6 +5,11 @@ circuit simulations and then injects them into PyTorch system simulations.
 We mirror that methodology: voltage-domain sigmas (DAC charge-sharing
 variation, comparator offset) are sampled here and folded into the pMAC
 domain for the behavioral model (CIMConfig.sigma_pmac).
+
+Every sweep accepts either a flat ``CIMConfig`` or a declarative
+``core.pipeline.MacroSpec`` — the specs are attribute-compatible and
+both support flat-keyword ``replace`` — so calibrated per-layer specs
+drop straight into these Monte-Carlos.
 """
 
 from __future__ import annotations
@@ -16,6 +21,9 @@ import jax.numpy as jnp
 
 from repro.core import adc, dac
 from repro.core.params import CIMConfig
+from repro.core.pipeline import MacroSpec
+
+OpPoint = CIMConfig | MacroSpec
 
 
 class MCResult(NamedTuple):
@@ -26,7 +34,7 @@ class MCResult(NamedTuple):
 
 
 def mc_dac_linearity(
-    cfg: CIMConfig, *, n_samples: int = 10_000, seed: int = 0
+    cfg: OpPoint, *, n_samples: int = 10_000, seed: int = 0
 ) -> MCResult:
     """Fig. 9(a): Monte-Carlo DAC transfer across all 16 input codes."""
     noisy_cfg = cfg.replace(noisy=True)
@@ -46,7 +54,7 @@ def mc_dac_linearity(
 
 
 def mc_accumulation_linearity(
-    cfg: CIMConfig, *, n_samples: int = 10_000, seed: int = 0
+    cfg: OpPoint, *, n_samples: int = 10_000, seed: int = 0
 ) -> MCResult:
     """Fig. 5(b): V_ABL Monte-Carlo vs the ideal equation over pMAC.
 
@@ -77,8 +85,39 @@ def mc_accumulation_linearity(
     return MCResult(pmac, jnp.mean(vs, 0), jnp.std(vs, 0), ideal)
 
 
+def mc_adc_split_error_rate(
+    cfg: OpPoint,
+    coarse_bits: int,
+    *,
+    n_samples: int = 4_096,
+    seed: int = 0,
+) -> jax.Array:
+    """P(code error) per pMAC level for one coarse/fine readout split.
+
+    Drives the voltage-domain comparator readout (per-comparator
+    Gaussian offsets) at the given split. All splits decode identical
+    codes noiselessly; under comparator offsets the error profiles stay
+    statistically indistinguishable too (the same reference crossings
+    decide every split), which is why the calibration sweep prices the
+    split purely by comparator count.
+    """
+    noisy_cfg = cfg.replace(noisy=True)
+    pmac = jnp.arange(noisy_cfg.pmac_levels, dtype=jnp.float32)
+    v = dac.abl_voltage_from_pmac(pmac, noisy_cfg)
+    ideal = adc.adc_read_voltage(v, cfg.replace(noisy=False),
+                                 coarse_bits=coarse_bits)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_samples)
+
+    def one(key):
+        code = adc.adc_read_voltage(v, noisy_cfg, key=key,
+                                    coarse_bits=coarse_bits)
+        return (code != ideal).astype(jnp.float32)
+
+    return jnp.mean(jax.vmap(one)(keys), axis=0)
+
+
 def mc_adc_error_rate(
-    cfg: CIMConfig, *, n_samples: int = 4_096, seed: int = 0
+    cfg: OpPoint, *, n_samples: int = 4_096, seed: int = 0
 ) -> jax.Array:
     """Probability of an ADC code error per pMAC level under HW noise.
 

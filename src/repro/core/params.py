@@ -33,6 +33,11 @@ class CIMConfig:
         the 241-level pMAC space at 16 rows, ADC step 8).
       adc_mode: 'floor' reproduces comparator semantics (code = #refs <=
         value); 'nearest' is a beyond-paper readout option.
+      adc_coarse_bits: coarse/fine split of the flash readout — the
+        coarse phase resolves this many bits with 2**c - 1 boundary
+        comparators, the fine phase the rest (paper: 1, i.e. 1-bit
+        coarse + 3-bit fine, 8 comparators). 0 = flat flash. Every
+        split yields identical codes; only hardware cost moves.
       vdd: supply voltage in volts (paper range 0.6-1.2).
       sigma_dac_mv: DAC (CBL charge-sharing) std-dev in mV, worst case
         (paper: 1.8 mV at code 8, 0.6 V). Scales linearly with vdd/0.6.
@@ -52,6 +57,7 @@ class CIMConfig:
     adc_bits: int = 4
     cutoff: float = 0.5
     adc_mode: ADCMode = "floor"
+    adc_coarse_bits: int = 1
     vdd: float = 0.9
     sigma_dac_mv: float = 1.8
     sigma_cmp_mv: float = 2.0
@@ -75,6 +81,11 @@ class CIMConfig:
             )
         if not (0.0 <= self.cutoff < 1.0):
             raise ValueError(f"cutoff={self.cutoff} must be in [0, 1)")
+        if not (0 <= self.adc_coarse_bits <= self.adc_bits):
+            raise ValueError(
+                f"adc_coarse_bits={self.adc_coarse_bits} out of range "
+                f"[0, {self.adc_bits}]"
+            )
         if self.act_bits < 1 or self.weight_bits < 1:
             raise ValueError("act_bits and weight_bits must be >= 1")
 
@@ -180,8 +191,28 @@ class CIMConfig:
         """MACs completed per macro cycle (paper: 16 x 8 = 128)."""
         return self.rows_per_group * self.n_outputs
 
+    @property
+    def comparator_count(self) -> int:
+        """Comparators per conversion for the coarse/fine split.
+
+        Delegates to ADCSpec — the single implementation of the
+        comparator-cost model (lazy import: pipeline imports params).
+        """
+        from repro.core.pipeline import ADCSpec
+
+        return ADCSpec(
+            bits=self.adc_bits, cutoff=self.cutoff,
+            coarse_bits=self.adc_coarse_bits,
+        ).comparator_count
+
     def replace(self, **kw) -> "CIMConfig":
         return dataclasses.replace(self, **kw)
+
+    def to_spec(self):
+        """The declarative MacroSpec form of this operating point."""
+        from repro.core.pipeline import MacroSpec  # lazy: no cycle
+
+        return MacroSpec.from_config(self)
 
 
 # The paper's published operating points.

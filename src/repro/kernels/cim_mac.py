@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.params import CIMConfig
+from repro.core.pipeline import MacroSpec
 
 
 def _gpq_kernel(
@@ -107,7 +108,7 @@ def _gpq_kernel(
 def gpq_matmul(
     x_codes: jax.Array,
     w_codes: jax.Array,
-    cfg: CIMConfig,
+    cfg: CIMConfig | MacroSpec,
     *,
     bm: int = 128,
     bn: int = 128,
@@ -116,9 +117,17 @@ def gpq_matmul(
 ) -> jax.Array:
     """Pallas GPQ matmul. x: [M, K] codes, w: [K, N] signed codes.
 
+    The operating point is consumed as a declarative ``MacroSpec``
+    (``CIMConfig`` inputs are normalized): the kernel reads the AMU
+    group geometry (``rows_active``) and the ADC transfer constants
+    (``adc_step``/``adc_codes``/``threshold``) from the stage specs
+    rather than raw config fields, so swept/calibrated specs lower
+    without a config round-trip.
+
     Shapes are padded to tile multiples; K padding is benign (zero codes
     contribute zero pMAC -> ADC code 0 -> no shift-add contribution).
     """
+    cfg = MacroSpec.from_config(cfg)
     m, k = x_codes.shape
     k2, n = w_codes.shape
     assert k == k2, (x_codes.shape, w_codes.shape)

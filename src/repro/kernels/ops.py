@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import CIMConfig
+from repro.core.pipeline import MacroSpec
 from repro.kernels.cim_mac import gpq_matmul
 
 
@@ -29,7 +30,7 @@ def _use_interpret() -> bool:
 def cim_matmul_kernel(
     x_codes: jax.Array,
     w_codes: jax.Array,
-    cfg: CIMConfig,
+    cfg: CIMConfig | MacroSpec,
     *,
     bm: int = 128,
     bn: int = 128,
@@ -37,8 +38,10 @@ def cim_matmul_kernel(
 ) -> jax.Array:
     """GPQ matmul via the Pallas kernel; drop-in for cim_matmul_int.
 
-    Noiseless by design (production inference path); Monte-Carlo noise
-    analysis uses the jnp behavioral model.
+    The operating point may be a flat ``CIMConfig`` or a declarative
+    ``MacroSpec`` — the kernel normalizes to the spec form and reads
+    its stage fields. Noiseless by design (production inference path);
+    Monte-Carlo noise analysis uses the jnp behavioral model.
     """
     return gpq_matmul(
         x_codes,

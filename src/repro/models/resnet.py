@@ -130,18 +130,28 @@ def _im2col_weight(params_w: jax.Array) -> jax.Array:
 
 
 def _conv(params_w, x, stride, policy: CIMPolicy | None,
-          key=None, cim_enabled: bool = True):
+          key=None, cim_enabled: bool = True, *, name: str = "",
+          tap=None):
     """Conv as im2col + (CIM) matmul. x: [B, H, W, C] NHWC.
 
     params_w is either the raw [kh, kw, cin, cout] filter or a
     PlannedConv over its im2col matrix (see plan_params).
+
+    ``tap(name, x2, w)`` observes the im2col activations [M, K] and the
+    weight (im2col matrix or PlannedWeights) of every macro-eligible
+    conv — the capture hook core.calibrate uses for the hardware-aware
+    per-layer sweep. Taps run eagerly (they see concrete arrays), so
+    pass them only to un-jitted forwards; a tapped fp forward takes the
+    im2col path (float association differs from lax.conv at ~1e-7).
     """
     planned = isinstance(params_w, PlannedConv)
+    want_tap = tap is not None and cim_enabled
     if planned:
         kernel_hw = params_w.kernel_hw
     else:
         kernel_hw = params_w.shape[:2]
-        if policy is None or policy.mode == "fp" or not cim_enabled:
+        if (policy is None or policy.mode == "fp" or not cim_enabled) \
+                and not want_tap:
             return jax.lax.conv_general_dilated(
                 x, params_w, (stride, stride), "SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -156,6 +166,8 @@ def _conv(params_w, x, stride, policy: CIMPolicy | None,
         plan = params_w.plan
         assert plan.k == pf, (plan.k, pf, kernel_hw)
         cout = plan.n
+        if want_tap:
+            tap(name, x2, plan)
         if policy is None or policy.mode == "fp" or not cim_enabled:
             y = x2 @ plan.best_weights(x2.dtype)
         else:
@@ -163,6 +175,8 @@ def _conv(params_w, x, stride, policy: CIMPolicy | None,
     else:
         wmat = _im2col_weight(params_w)
         cout = wmat.shape[-1]
+        if want_tap:
+            tap(name, x2, wmat)
         y = engine.matmul(x2, wmat, policy, key=key)
     return y.reshape(b, ho, wo, cout)
 
@@ -227,6 +241,7 @@ def forward(
     *,
     train: bool = False,
     key: jax.Array | None = None,
+    tap=None,
 ) -> tuple[jax.Array, dict]:
     policy = cfg.cim
     new_state: dict[str, Any] = {}
@@ -237,7 +252,7 @@ def forward(
         return None if key is None else jax.random.fold_in(key, kidx[0])
 
     h = _conv(params["stem"], x, 1, policy, key=nk(),
-              cim_enabled=policy.apply_to_stem)
+              cim_enabled=policy.apply_to_stem, name="stem", tap=tap)
     h, new_state["bn_stem"] = _bn(params["bn_stem"], bn_state["bn_stem"],
                                   h, train, cfg.bn_momentum)
     h = jax.nn.relu(h)
@@ -249,15 +264,18 @@ def forward(
             bp, bs = params[name], bn_state[name]
             ns = {}
             stride = 2 if (bi == 0 and si > 0) else 1
-            r = _conv(bp["conv1"], h, stride, policy, key=nk())
+            r = _conv(bp["conv1"], h, stride, policy, key=nk(),
+                      name=f"{name}/conv1", tap=tap)
             r, ns["bn1"] = _bn(bp["bn1"], bs["bn1"], r, train,
                                cfg.bn_momentum)
             r = jax.nn.relu(r)
-            r = _conv(bp["conv2"], r, 1, policy, key=nk())
+            r = _conv(bp["conv2"], r, 1, policy, key=nk(),
+                      name=f"{name}/conv2", tap=tap)
             r, ns["bn2"] = _bn(bp["bn2"], bs["bn2"], r, train,
                                cfg.bn_momentum)
             if "proj" in bp:
-                sc = _conv(bp["proj"], h, stride, policy, key=nk())
+                sc = _conv(bp["proj"], h, stride, policy, key=nk(),
+                           name=f"{name}/proj", tap=tap)
                 sc, ns["bn_proj"] = _bn(bp["bn_proj"], bs["bn_proj"], sc,
                                         train, cfg.bn_momentum)
             else:

@@ -15,6 +15,11 @@ Under a CIM-mode policy the planned codes equal the per-call ones, so
 token streams are bit-identical to the unplanned engine (tested); under
 an 'fp' policy planning instead means digital int8 weight-only serving
 (plans drop the float weights for the HBM-traffic win).
+
+Planned trees persist through ``checkpoint.store`` (PlannedWeights is a
+registered dataclass, so its leaves checkpoint under attribute paths):
+``ServeEngine.restore_planned`` warm-starts a server from such a
+checkpoint without re-quantizing / re-bit-slicing any weight.
 """
 
 from __future__ import annotations
@@ -53,6 +58,34 @@ class ServeEngine:
             ),
             donate_argnums=(3,),
         )
+
+    @classmethod
+    def restore_planned(
+        cls,
+        directory,
+        cfg: ModelConfig,
+        *,
+        max_len: int,
+        batch: int,
+        step: int | None = None,
+    ) -> "ServeEngine":
+        """Warm-start a server from a checkpointed *planned* tree.
+
+        The restore target is built structurally (``jax.eval_shape``
+        over init + ``plan_params`` over the ShapeDtypeStruct tree), so
+        no weight is materialized, quantized or bit-sliced here — the
+        plans come back exactly as the saver wrote them. Counterpart of
+        ``store.save(plan_params(params, policy=cfg.cim), dir, step)``
+        (or ``Trainer.planned_params`` at the train->serve handoff).
+        """
+        from repro.checkpoint import store  # lazy: optional at serve time
+
+        sds_params = jax.eval_shape(
+            lambda: transformer.init(jax.random.PRNGKey(0), cfg)
+        )
+        target = cim_engine.plan_params(sds_params, policy=cfg.cim)
+        planned = store.restore(directory, target, step=step)
+        return cls(planned, cfg, max_len=max_len, batch=batch, plan=False)
 
     def generate(self, prompts: jax.Array, n_tokens: int) -> np.ndarray:
         """Greedy-decode n_tokens after the prompt batch [B, S]."""

@@ -127,6 +127,136 @@ class TestPlanReuse:
         )
 
 
+class TestPlanePacking:
+    """Satellite: behavioral planes bit-packed 8/byte for large-K."""
+
+    def test_packed_parity_with_unpacked(self):
+        """Packed and unpacked plans execute bit-identically."""
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        x, w = rand_xw(k=96)
+        packed = engine.plan_weights(w, cfg, policy, with_planes=True,
+                                     pack_planes=True)
+        unpacked = engine.plan_weights(w, cfg, policy, with_planes=True,
+                                       pack_planes=False)
+        assert packed.planes.dtype == jnp.uint8
+        assert packed.planes.shape == (6, 16, 8)  # [G, rows, N]
+        assert unpacked.planes.shape == (6, 8, 16, 8)  # [G, B, rows, N]
+        np.testing.assert_array_equal(
+            np.asarray(engine.execute(x, packed, policy)),
+            np.asarray(engine.execute(x, unpacked, policy)),
+        )
+
+    def test_packed_parity_under_noise(self):
+        """Same PRNG fold-in order either way -> identical noisy runs."""
+        cfg = PAPER_OP_16ROWS.replace(noisy=True)
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        x, w = rand_xw(k=96)
+        key = jax.random.PRNGKey(9)
+        packed = engine.plan_weights(w, cfg, policy, with_planes=True,
+                                     pack_planes=True)
+        unpacked = engine.plan_weights(w, cfg, policy, with_planes=True,
+                                       pack_planes=False)
+        np.testing.assert_array_equal(
+            np.asarray(engine.execute(x, packed, policy, key=key)),
+            np.asarray(engine.execute(x, unpacked, policy, key=key)),
+        )
+
+    def test_packed_wide_weights_rejected(self):
+        """Explicit pack_planes with >8-bit weights must raise, not
+        silently truncate the high planes to one byte."""
+        cfg = PAPER_OP_16ROWS.replace(weight_bits=10)
+        with pytest.raises(ValueError, match="pack_planes"):
+            engine.plan_weights(
+                jnp.ones((64, 4), jnp.float32), cfg,
+                with_planes=True, pack_planes=True,
+            )
+
+    def test_auto_pack_threshold(self):
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        small = engine.plan_weights(
+            jnp.ones((64, 4), jnp.float32), cfg, policy, with_planes=True
+        )
+        assert small.planes.ndim == 4  # below threshold: unpacked
+        big = engine.plan_weights(
+            jnp.ones((engine.PACK_PLANES_MIN_K, 4), jnp.float32),
+            cfg, policy, with_planes=True,
+        )
+        assert big.planes.ndim == 3 and big.planes.dtype == jnp.uint8
+
+    def test_sds_plan_mirrors_packing(self):
+        """Dry-run ShapeDtypeStruct plans must agree with concrete ones
+        (same shapes/dtypes) on both sides of the packing threshold."""
+        cfg = PAPER_OP_16ROWS
+        policy = CIMPolicy(mode="cim", cim=cfg)
+        for k in (64, engine.PACK_PLANES_MIN_K):
+            w = jnp.ones((k, 4), jnp.float32)
+            concrete = engine.plan_weights(w, cfg, policy,
+                                           with_planes=True)
+            sds = engine.plan_params(
+                {"w": jax.ShapeDtypeStruct((k, 4), jnp.float32)},
+                cfg, policy,
+            )["w"]
+            assert sds.planes.shape == concrete.planes.shape
+            assert sds.planes.dtype == concrete.planes.dtype
+
+
+class TestPlannedCheckpoint:
+    """Satellite: PlannedWeights pytrees persist through checkpoint.store
+    (registered-dataclass key-pathing), so serving warm-starts without
+    re-planning."""
+
+    def test_planned_tree_roundtrip(self, tmp_path):
+        from repro.checkpoint import store
+
+        policy = CIMPolicy(mode="cim", cim=PAPER_OP_16ROWS)
+        params = {"wq": {"w": jnp.asarray(
+            RNG.normal(size=(32, 8)), jnp.float32)},
+            "norm": {"scale": jnp.ones((8,))}}
+        planned = engine.plan_params(params, policy=policy)
+        store.save(planned, tmp_path, 3)
+        target = engine.plan_params(
+            jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+            ),
+            policy=policy,
+        )
+        restored = store.restore(tmp_path, target)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)),
+            planned, restored,
+        )
+
+    def test_attr_key_paths_are_flat(self):
+        """Registered-dataclass leaves checkpoint under 'w/codes'-style
+        names (no stray GetAttrKey dots)."""
+        from repro.checkpoint import store
+
+        planned = {"w": engine.plan_weights(
+            jnp.ones((16, 4), jnp.float32), PAPER_OP_16ROWS)}
+        names = store._leaf_names(planned)
+        assert "w/codes" in names and "w/scale" in names
+        assert all("." not in n for n in names), names
+
+    def test_serving_warm_start_without_replanning(self, tmp_path):
+        from repro.checkpoint import store
+
+        cfg = get_config("qwen2_0_5b", smoke=True).replace(
+            cim=CIMPolicy(mode="cim-exact", cim=PAPER_OP_16ROWS))
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        store.save(engine.plan_params(params, policy=cfg.cim),
+                   tmp_path, 0)
+        warm = ServeEngine.restore_planned(tmp_path, cfg, max_len=32,
+                                           batch=2)
+        cold = ServeEngine(params, cfg, max_len=32, batch=2, plan=True)
+        prompts = jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (2, 5)), jnp.int32)
+        np.testing.assert_array_equal(
+            warm.generate(prompts, 4), cold.generate(prompts, 4))
+
+
 class TestBackendRegistry:
     def test_builtins_registered(self):
         names = engine.backend_names()

@@ -1,0 +1,250 @@
+"""AnalogPipeline / MacroSpec: the composable analog macro abstraction.
+
+Bit-exactness of the default stage composition against the pre-refactor
+macro_op oracle, MacroSpec <-> CIMConfig duck-compatibility, the
+generalized coarse/fine ADC split, and stage swappability.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc, dac, macro
+from repro.core.params import PAPER_OP_8ROWS, PAPER_OP_16ROWS, CIMConfig
+from repro.core.pipeline import (
+    ADCSpec,
+    ADCStage,
+    AMUSpec,
+    AnalogPipeline,
+    MacroSpec,
+    MacroState,
+    default_pipeline,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def rand_xw():
+    x = jnp.asarray(RNG.integers(0, 16, 16), jnp.int32)
+    w = jnp.asarray(RNG.integers(-128, 128, (16, 8)), jnp.int32)
+    return x, w
+
+
+class TestPipelineBitExact:
+    """The tentpole invariant: composed stages == pre-refactor oracle."""
+
+    @pytest.mark.parametrize("cfg", [PAPER_OP_16ROWS, PAPER_OP_8ROWS],
+                             ids=["16rows", "8rows"])
+    def test_noiseless_equals_oracle(self, cfg):
+        for _ in range(10):
+            x, w = rand_xw()
+            got = macro.macro_op(x, w, cfg)
+            want = macro._macro_op_oracle(x, w, cfg)
+            for g, o in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
+
+    def test_noisy_equals_oracle_same_key(self):
+        cfg = PAPER_OP_16ROWS.replace(noisy=True, vdd=0.6)
+        for i in range(5):
+            x, w = rand_xw()
+            key = jax.random.PRNGKey(i)
+            got = macro.macro_op(x, w, cfg, key=key)
+            want = macro._macro_op_oracle(x, w, cfg, key=key)
+            for g, o in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
+
+    def test_macrospec_input_equals_config_input(self):
+        x, w = rand_xw()
+        cfg = PAPER_OP_16ROWS
+        got = macro.macro_op(x, w, MacroSpec.from_config(cfg))
+        want = macro.macro_op(x, w, cfg)
+        np.testing.assert_array_equal(np.asarray(got.outputs),
+                                      np.asarray(want.outputs))
+
+    def test_pipeline_state_exposes_stage_observables(self):
+        x, w = rand_xw()
+        state = default_pipeline().run(x, w, MacroSpec())
+        assert state.v_rows.shape == (16,)
+        assert state.v_abl.shape == (8, 8)
+        assert state.adc_codes.shape == (8, 8)
+        assert state.outputs.shape == (8,)
+        assert state.pmac_ideal.shape == (8, 8)
+
+
+class TestMacroSpec:
+    def test_roundtrip_config(self):
+        cfg = PAPER_OP_16ROWS.replace(
+            rows_active=8, adc_bits=5, cutoff=0.25, vdd=1.2,
+            c_abl_ratio=0.7, noisy=True, adc_coarse_bits=2,
+        )
+        assert MacroSpec.from_config(cfg).to_config() == cfg
+
+    def test_derived_quantities_match_config(self):
+        for cfg in (PAPER_OP_16ROWS, PAPER_OP_8ROWS):
+            spec = MacroSpec.from_config(cfg)
+            for attr in ("pmac_levels", "q_full", "threshold", "adc_step",
+                         "adc_codes", "share_denom", "sigma_pmac",
+                         "act_levels", "n_outputs", "macs_per_cycle"):
+                assert getattr(spec, attr) == getattr(cfg, attr), attr
+
+    def test_flat_replace(self):
+        spec = MacroSpec().replace(adc_bits=3, rows_active=4,
+                                   cutoff=0.25, noisy=True)
+        assert spec.adc.bits == 3
+        assert spec.amu.rows_active == 4
+        assert spec.adc.cutoff == 0.25 and spec.noisy
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="rows_active"):
+            MacroSpec(amu=AMUSpec(rows_active=32))
+        with pytest.raises(ValueError, match="coarse_bits"):
+            MacroSpec(adc=ADCSpec(bits=4, coarse_bits=5))
+
+    def test_comparator_counts(self):
+        """Paper's cost claim: 1+3 split = 8 comparators vs 15 flat."""
+        assert ADCSpec(bits=4, coarse_bits=0).comparator_count == 15
+        assert ADCSpec(bits=4, coarse_bits=1).comparator_count == 8
+        assert ADCSpec(bits=4, coarse_bits=2).comparator_count == 6
+        assert PAPER_OP_16ROWS.comparator_count == 8
+
+    def test_hashable_static_jit_arg(self):
+        spec = MacroSpec()
+        hash(spec)  # frozen nested dataclasses
+        x, w = rand_xw()
+
+        @jax.jit
+        def f(x, w):
+            return macro.macro_op(x, w, spec).outputs
+
+        np.testing.assert_allclose(
+            np.asarray(f(x, w)),
+            np.asarray(macro.macro_op(x, w, spec).outputs),
+            rtol=1e-6,
+        )
+
+
+class TestADCSplit:
+    """Satellite: coarse-fine flash transfer properties."""
+
+    @pytest.mark.parametrize("coarse", [0, 1, 2, 3, 4])
+    def test_every_split_equals_flat_flash(self, coarse):
+        cfg = PAPER_OP_16ROWS
+        pmac = jnp.arange(cfg.pmac_levels, dtype=jnp.float32)
+        v = dac.abl_voltage_from_pmac(pmac, cfg)
+        flat = adc.adc_flat_flash(v, cfg)
+        got = adc.adc_read_voltage(v, cfg, coarse_bits=coarse)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(flat))
+
+    @pytest.mark.parametrize("rows,bits", [(16, 4), (8, 4), (8, 5),
+                                           (8, 3), (16, 3), (4, 4)])
+    def test_transfer_monotone_noise_free_specs(self, rows, bits):
+        spec = MacroSpec().replace(rows_active=rows, adc_bits=bits,
+                                   noisy=False)
+        pmac = jnp.arange(spec.pmac_levels, dtype=jnp.float32)
+        v = dac.abl_voltage_from_pmac(pmac, spec)
+        want = np.asarray(adc.adc_transfer_int(pmac, spec))
+        for coarse in range(0, bits + 1):
+            codes = np.asarray(
+                adc.adc_read_voltage(v, spec, coarse_bits=coarse)
+            )
+            assert np.all(np.diff(codes) >= 0), (rows, bits, coarse)
+            assert codes.min() == 0
+            assert codes.max() == spec.adc_codes - 1
+            # stronger than monotone: the voltage readout must equal
+            # the integer behavioral transfer level for level
+            np.testing.assert_array_equal(codes, want)
+
+    def test_heterogeneous_reference_patterns(self):
+        """5-bit @ 16 rows needs 32 reference levels from 16 AMU_REF
+        arrays — impossible with the paper's homogeneous pattern, but
+        each array has its own iBL DAC, so heterogeneous per-row codes
+        (level 17: pMAC 68 = 15*4 + 8) land every level exactly."""
+        spec = MacroSpec().replace(rows_active=16, adc_bits=5)
+        pats = adc.reference_patterns(spec)
+        assert len(pats) == 32
+        for n, row in enumerate(pats):
+            assert sum(row) == n * spec.adc_step
+            assert max(row) <= spec.act_max
+        # and the generated voltages sit at the ideal spacing
+        want = dac.abl_voltage_from_pmac(
+            jnp.arange(32, dtype=jnp.float32) * spec.adc_step, spec)
+        np.testing.assert_allclose(
+            np.asarray(adc.reference_voltages(spec)),
+            np.asarray(want), rtol=1e-6)
+
+    def test_unrepresentable_reference_levels_raise(self):
+        """A level needing more charge than the arrays can sink (beyond
+        rows*act_max) must refuse rather than silently saturate."""
+        spec = MacroSpec().replace(cutoff=0.0, adc_bits=8)  # step 1,
+        # top level 255 > 16 arrays * act_max 15 = 240
+        with pytest.raises(ValueError, match="not representable"):
+            adc.reference_patterns(spec)
+        with pytest.raises(ValueError, match="not representable"):
+            adc.adc_read_voltage(jnp.zeros(3), spec)
+
+    def test_spec_split_drives_stage(self):
+        """ADCStage reads the split from the spec (same codes, by
+        construction, but the split must actually reach the readout)."""
+        spec = MacroSpec(adc=ADCSpec(bits=4, coarse_bits=2))
+        x, w = rand_xw()
+        out = macro.macro_op(x, w, spec)
+        np.testing.assert_array_equal(
+            np.asarray(out.outputs),
+            np.asarray(macro.macro_op(x, w, MacroSpec()).outputs),
+        )
+
+    def test_invalid_split_raises(self):
+        cfg = PAPER_OP_16ROWS
+        with pytest.raises(ValueError, match="coarse_bits"):
+            adc.adc_read_voltage(jnp.zeros(3), cfg, coarse_bits=9)
+
+
+class TestStageSwap:
+    def test_replace_adc_stage(self):
+        """A swapped ADC stage changes the computed function — the
+        composability the multi-macro roadmap builds on."""
+
+        @dataclasses.dataclass(frozen=True)
+        class IdealADCStage:
+            """Full-resolution readout: pmac passthrough (no quant)."""
+
+            name: str = "adc"
+
+            def __call__(self, state, spec):
+                pmac = dac.pmac_from_abl_voltage(state.v_abl, spec)
+                # encode as "codes" on a step-1 grid for ShiftAdd by
+                # reusing dequant's code*step with step compensation
+                return state.evolve(
+                    adc_codes=pmac / spec.adc_step
+                )
+
+        pipe = default_pipeline().replace_stage("adc", IdealADCStage())
+        assert pipe.names == ("dac", "amu", "adc", "shift_add")
+        x, w = rand_xw()
+        spec = MacroSpec()
+        out = pipe.run(x, w, spec)
+        # Ideal ADC -> outputs equal the exact integer MAC result.
+        want = jnp.einsum(
+            "r,rn->n", x.astype(jnp.int32), w.astype(jnp.int32)
+        )
+        # f32 voltage-domain roundtrip: ~3e-5 relative per plane,
+        # amplified by the 2^7 MSB shift-add weight.
+        np.testing.assert_allclose(np.asarray(out.outputs),
+                                   np.asarray(want), atol=0.05)
+
+    def test_unknown_stage_name_raises(self):
+        with pytest.raises(KeyError, match="no stage"):
+            default_pipeline().replace_stage("nope", ADCStage())
+        with pytest.raises(KeyError, match="no stage"):
+            AnalogPipeline(stages=()).stage("adc")
+
+    def test_macro_state_is_pytree(self):
+        state = MacroState(v_abl=jnp.ones((3,)))
+        leaves = jax.tree.leaves(state)
+        assert len(leaves) == 1
+        mapped = jax.tree.map(lambda a: a * 2, state)
+        np.testing.assert_array_equal(np.asarray(mapped.v_abl),
+                                      2 * np.ones(3))

@@ -12,9 +12,57 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import adc, dac, matmul, quant
 from repro.core.params import PAPER_OP_16ROWS, CIMConfig
+from repro.core.pipeline import MacroSpec
 from repro.kernels.ref import cim_matmul_ref
 
 _SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    coarse=st.integers(0, 4),
+    kappa=st.sampled_from([0.0, 0.5, 2.0]),
+    vdd=st.sampled_from([0.6, 0.9, 1.2]),
+)
+@settings(**_SETTINGS)
+def test_coarse_fine_split_equals_flat_flash_property(coarse, kappa, vdd):
+    """Every coarse/fine split decodes every 4-bit code identically to
+    the flat 15-comparator flash, across kappa and VDD."""
+    cfg = PAPER_OP_16ROWS.replace(c_abl_ratio=kappa, vdd=vdd)
+    pmac = jnp.arange(cfg.pmac_levels, dtype=jnp.float32)
+    v = dac.abl_voltage_from_pmac(pmac, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(adc.adc_read_voltage(v, cfg, coarse_bits=coarse)),
+        np.asarray(adc.adc_flat_flash(v, cfg)),
+    )
+
+
+@given(
+    rows=st.sampled_from([4, 8, 16]),
+    adc_bits=st.integers(2, 5),
+    data=st.data(),
+)
+@settings(**_SETTINGS)
+def test_voltage_adc_monotone_under_noise_free_macrospec(
+    rows, adc_bits, data
+):
+    """The voltage-domain coarse-fine transfer is monotone and bounded
+    for every noise-free MacroSpec on the sweep grid."""
+    try:
+        spec = MacroSpec().replace(rows_active=rows, adc_bits=adc_bits,
+                                   noisy=False)
+    except ValueError:
+        return  # bits out of range at this row count
+    coarse = data.draw(st.integers(0, adc_bits))
+    pmac = jnp.arange(spec.pmac_levels, dtype=jnp.float32)
+    v = dac.abl_voltage_from_pmac(pmac, spec)
+    try:
+        codes = np.asarray(
+            adc.adc_read_voltage(v, spec, coarse_bits=coarse)
+        )
+    except ValueError:
+        return  # in-SRAM reference level not representable
+    assert np.all(np.diff(codes) >= 0)
+    assert codes.min() == 0 and codes.max() == spec.adc_codes - 1
 
 
 @given(
