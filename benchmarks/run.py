@@ -22,6 +22,7 @@ from benchmarks import (
     roofline,
     table1_accuracy,
     table2_summary,
+    variants_bench,
 )
 
 ALL = {
@@ -34,6 +35,7 @@ ALL = {
     "kernel": kernel_bench.main,
     "plan": kernel_bench.planned_main,
     "roofline": roofline.main,
+    "variants": variants_bench.main,
 }
 
 

@@ -17,6 +17,7 @@ from benchmarks.common import (
 )
 from repro.configs.base import CIMPolicy
 from repro.core import calibrate_resnet
+from repro.core.calibrate import CalibrationGrid
 
 
 def main():
@@ -80,6 +81,26 @@ def main():
                    n_images=n_images)
     print(f"accuracy with per-layer calibrated 'analog' backend: "
           f"{acc:.3f} (drop {fp-acc:+.3f})")
+
+    print("\n=== macro-variant axis (core.variants) ===")
+    # Re-run the sweep letting each layer choose its macro family too:
+    # the paper's P-8T flash vs the single-ADC analog adder network
+    # (arXiv:2212.04320) vs the memory cell-embedded ADC
+    # (arXiv:2307.05944). The summary's variant/TOPS/W columns show
+    # what the joint fidelity-vs-cost rule picks per layer.
+    vres = calibrate_resnet(
+        params, bn, images, rcfg,
+        grid=CalibrationGrid(
+            variants=("p8t", "adder-tree", "cell-adc")),
+        max_samples=128 if args.fast else 256,
+    )
+    print(vres.summary())
+    vres.register("analog-variants")
+    acc_v = evaluate(params, bn, ds,
+                     dataclasses.replace(pol, backend="analog-variants"),
+                     n_images=n_images)
+    print(f"accuracy with variant-calibrated backend: {acc_v:.3f} "
+          f"(drop {fp-acc_v:+.3f})")
 
     print("\nExpected orderings (the paper's claims): accuracy falls "
           "with more active rows under noise; 4-bit ADC ~ 5-bit under "

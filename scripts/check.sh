@@ -6,10 +6,24 @@
 # Tests marked @pytest.mark.slow (long-grid calibration sweeps, full
 # benchmark-scale evals) are deselected by default via pyproject's
 # addopts; run them explicitly with:  pytest -m slow
+#
+# A wall-time budget guards against tier-1 runtime regressions (the
+# calibration sweeps once pushed the suite past 5 minutes): override
+# with TIER1_BUDGET_S for slower boxes. The default allows for the
+# seed's heavy model/serving compiles, which dominate the wall time.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+TIER1_BUDGET_S="${TIER1_BUDGET_S:-600}"
+t0=$(date +%s)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-# Smoke the plan/execute benchmark path end to end (CI-scale shapes):
-# catches engine/backends regressions the unit tests abstract over.
+elapsed=$(( $(date +%s) - t0 ))
+echo "tier-1 wall time: ${elapsed}s (budget ${TIER1_BUDGET_S}s)"
+if [ "${elapsed}" -gt "${TIER1_BUDGET_S}" ]; then
+    echo "FAIL: tier-1 exceeded the ${TIER1_BUDGET_S}s wall-time budget" >&2
+    exit 1
+fi
+# Smoke the plan/execute and macro-variant benchmark paths end to end
+# (CI-scale shapes): catches engine/backend/variant regressions the
+# unit tests abstract over.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/run.py --only plan --smoke
+    python benchmarks/run.py --only plan,variants --smoke

@@ -80,6 +80,7 @@ from repro.core.energy import (
     frequency_mhz,
     layer_energy_j,
     macro_report,
+    variant_tops_per_w,
 )
 # NOTE: engine.matmul (the one-shot QAT entry point) is deliberately
 # NOT re-exported here — the name would shadow the core.matmul
@@ -133,6 +134,19 @@ from repro.core.pipeline import (
     default_pipeline,
     default_stages,
 )
+# NOTE: like engine.matmul/calibrate.calibrate, the short registry
+# accessors stay namespaced (``variants.get``); the package re-exports
+# the aliased forms plus the variant classes.
+from repro.core.variants import (
+    MacroVariant,
+    MergedQuant,
+    adder_tree_matmul_int,
+    get_variant,
+    merged_quant,
+    merged_transfer_int,
+    register_variant,
+    variant_names,
+)
 from repro.core.quant import (
     QuantizedActs,
     QuantizedWeights,
@@ -164,6 +178,8 @@ __all__ = [
     "MacroOut",
     "MacroSpec",
     "MacroState",
+    "MacroVariant",
+    "MergedQuant",
     "PAPER_MACRO_16ROWS",
     "PAPER_MACRO_8ROWS",
     "PAPER_OP_16ROWS",
@@ -181,6 +197,7 @@ __all__ = [
     "adc_flat_flash",
     "adc_read_voltage",
     "adc_transfer_int",
+    "adder_tree_matmul_int",
     "backend_names",
     "bitslice_weights",
     "calibrate_resnet",
@@ -201,10 +218,13 @@ __all__ = [
     "fake_quant_weights",
     "frequency_mhz",
     "get_backend",
+    "get_variant",
     "layer_energy_j",
     "macro_op",
     "macro_op_reference_digital",
     "macro_report",
+    "merged_quant",
+    "merged_transfer_int",
     "multiply_bitcell",
     "plan_params",
     "plan_weights",
@@ -216,5 +236,8 @@ __all__ = [
     "quantized_backend",
     "reference_voltages",
     "register_backend",
+    "register_variant",
     "unslice_weights",
+    "variant_names",
+    "variant_tops_per_w",
 ]

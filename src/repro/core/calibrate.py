@@ -33,6 +33,7 @@ keys.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Mapping
 
 import jax
@@ -41,6 +42,7 @@ import numpy as np
 
 from repro.core import dac, engine, quant
 from repro.core import matmul as matmul_lib
+from repro.core import variants as variants_lib
 from repro.core.params import CIMConfig
 from repro.core.pipeline import (
     AnalogPipeline,
@@ -66,11 +68,23 @@ DEFAULT_SLACK = 2.0
 
 @dataclasses.dataclass(frozen=True)
 class CalibrationGrid:
-    """The swept operating-point axes (paper Fig. 7b grid + ADC split)."""
+    """The swept operating-point axes (paper Fig. 7b grid + ADC split).
+
+    ``variants`` adds the macro-family axis over the
+    :mod:`repro.core.variants` registry: each named variant's transfer
+    is scored on the same (adc_bits, rows_active) grid and competes in
+    the same cheapest-within-slack selection, so the sweep can hand
+    different layers to different macro families. The default sweeps
+    only the paper's P-8T macro (backward compatible); pass e.g.
+    ``variants=("p8t", "adder-tree", "cell-adc")`` for the full
+    library. ``coarse_bits`` only applies to flash-readout variants
+    (the SAR-interface variants have no comparator-bank split).
+    """
 
     adc_bits: tuple[int, ...] = (3, 4, 5)
     rows_active: tuple[int, ...] = (4, 8, 16)
     coarse_bits: tuple[int, ...] = (1, 2)
+    variants: tuple[str, ...] = ("p8t",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +94,7 @@ class PointResult:
     spec: MacroSpec
     score: float  # relative L2 error of macro output vs exact-int output
     cost: float  # comparator evaluations per MAC (hw_cost)
+    variant: str = "p8t"  # macro family (repro.core.variants registry)
 
     @property
     def point(self) -> tuple[int, int, int]:
@@ -98,6 +113,7 @@ class LayerCalibration:
     score: float
     cost: float
     table: tuple[PointResult, ...]
+    variant: str = "p8t"  # winning macro family for this layer
 
     @property
     def adc_spec(self):
@@ -106,7 +122,7 @@ class LayerCalibration:
 
 
 def hw_cost(spec: MacroSpec | CIMConfig) -> float:
-    """Comparator evaluations per MAC at this operating point.
+    """Comparator evaluations per MAC at this operating point (P-8T).
 
     Each group of ``rows_active`` MACs (per bit-plane, per output) costs
     one ADC conversion of ``comparator_count`` comparator evaluations,
@@ -114,8 +130,12 @@ def hw_cost(spec: MacroSpec | CIMConfig) -> float:
     weight_bits factor is common to every point). This is the knob the
     sweep trades against fidelity: more active rows amortize the ADC,
     fewer ADC bits (and a balanced coarse/fine split) shrink it.
+
+    Delegates to the P-8T variant's cost model — the single
+    implementation; other macro families define their own
+    ``MacroVariant.hw_cost`` (see ``repro.core.variants``).
     """
-    return spec.comparator_count / spec.rows_active
+    return variants_lib.P8T.hw_cost(spec)
 
 
 def adc_code_table(
@@ -186,6 +206,44 @@ def _macro_scores(
     return float(jnp.mean(jax.vmap(one)(keys)))
 
 
+def _merged_pmac(pmac: jax.Array, weight_bits: int) -> jax.Array:
+    """[M, G, B, N] plane partials -> [M, G, N] signed merged values."""
+    signs = quant.plane_signs(weight_bits).astype(jnp.float32)
+    return jnp.einsum("mgbn,b->mgn", pmac.astype(jnp.float32), signs)
+
+
+def _merged_scores(
+    merged: jax.Array,
+    sigma: float,
+    y_ref: jax.Array,
+    spec: MacroSpec,
+    keys: jax.Array | None,
+) -> float:
+    """Relative L2 error of the single-ADC merged transfer vs exact.
+
+    The merged-conversion analogue of :func:`_macro_scores`: the B
+    plane partial-MACs fold into one signed value per (group, output)
+    (``merged``/``sigma`` depend only on the row grouping, so the
+    caller hoists them out of the adc_bits loop), noise is injected in
+    the merged domain, and the conversion is the exact transfer
+    ``variants.merged_transfer_int`` executes — so the scored and
+    replayed transfers coincide by construction.
+    """
+    ref_norm = jnp.linalg.norm(y_ref) + 1e-12
+
+    def one(key) -> jax.Array:
+        x = merged
+        if key is not None:
+            x = x + sigma * jax.random.normal(key, x.shape)
+        code = variants_lib.merged_transfer_int(x, spec)
+        y = jnp.sum(variants_lib.merged_dequant(code, spec), axis=1)
+        return jnp.linalg.norm(y - y_ref) / ref_norm
+
+    if keys is None:
+        return float(one(None))
+    return float(jnp.mean(jax.vmap(one)(keys)))
+
+
 def _layer_codes(
     w: jax.Array | engine.PlannedWeights, weight_bits: int
 ) -> jax.Array:
@@ -240,15 +298,24 @@ def calibrate(
     rng = np.random.default_rng(seed)
     key0 = jax.random.PRNGKey(seed)
 
-    # The LUT depends only on the spec, not the layer: cache across the
-    # (layers x grid) product, and record every scored spec so the
-    # backend can replay exactly these transfers at execute time.
-    lut_cache: dict[MacroSpec, Any] = {}
+    # The LUT depends only on (variant, spec), not the layer: cache
+    # across the (layers x grid) product, and record every scored spec
+    # so the backend can replay exactly these transfers at execute
+    # time. The ``pipeline`` argument IS the "p8t" family pipeline
+    # (possibly with user-swapped stages); other variant names resolve
+    # through the registry.
+    lut_cache: dict[tuple[str, MacroSpec], Any] = {}
 
-    def lut_for(spec_rb: MacroSpec):
-        if spec_rb not in lut_cache:
-            lut_cache[spec_rb] = adc_code_table(pipeline, spec_rb)
-        return lut_cache[spec_rb]
+    def pipe_for(vname: str) -> AnalogPipeline:
+        if vname == "p8t":
+            return pipeline
+        return variants_lib.get(vname).pipeline
+
+    def lut_for(vname: str, spec_rb: MacroSpec):
+        key = (vname, spec_rb)
+        if key not in lut_cache:
+            lut_cache[key] = adc_code_table(pipe_for(vname), spec_rb)
+        return lut_cache[key]
 
     layers: dict[str, LayerCalibration] = {}
     for li, (name, w) in enumerate(weights.items()):
@@ -286,50 +353,75 @@ def calibrate(
             except ValueError:
                 continue
             pmac = _grouped_pmac(x_codes, planes, rows)
+            merged = sigma_m = None  # lazily built, once per row count
             for bits in grid.adc_bits:
                 try:
                     spec_rb = spec_r.replace(adc_bits=bits,
                                              adc_coarse_bits=0)
                 except ValueError:
                     continue  # bits out of range at this row count
-                if spec_rb.threshold % spec_rb.adc_codes != 0:
-                    continue  # no integer in-SRAM reference spacing
-                try:
-                    lut = lut_for(spec_rb)
-                except ValueError:
-                    continue  # reference level not representable in-SRAM
                 keys = None
                 if noisy:
+                    # Same noise realizations for every variant at this
+                    # grid point: the variant axis compares transfers,
+                    # not luck.
                     keys = jax.random.split(
                         jax.random.fold_in(key0, li * 1000 + rows * 10 + bits),
                         n_noise_keys,
                     )
-                score = _macro_scores(pmac, y_ref, spec_rb, lut, keys)
-                for c in grid.coarse_bits:
-                    if not (0 <= c <= bits):
-                        continue
-                    spec_full = spec_rb.replace(adc_coarse_bits=c)
-                    table_rows.append(PointResult(
-                        spec=spec_full,
-                        score=score,
-                        cost=hw_cost(spec_full),
-                    ))
+                for vname in grid.variants:
+                    var = variants_lib.get(vname)
+                    if var.per_plane_adc:
+                        if spec_rb.threshold % spec_rb.adc_codes != 0:
+                            continue  # no integer reference spacing
+                        try:
+                            lut = lut_for(vname, spec_rb)
+                        except ValueError:
+                            continue  # reference level not representable
+                        score = _macro_scores(
+                            pmac, y_ref, spec_rb, lut, keys
+                        )
+                    else:
+                        mq = variants_lib.merged_quant(spec_rb)
+                        if mq.step != int(mq.step):
+                            continue  # no integer merged-grid spacing
+                        if merged is None:  # bits-independent pieces
+                            merged = _merged_pmac(
+                                pmac, base_spec.weight_bits
+                            )
+                            sigma_m = variants_lib.merged_sigma(spec_r)
+                        score = _merged_scores(
+                            merged, sigma_m, y_ref, spec_rb, keys
+                        )
+                    splits = grid.coarse_bits if var.flash_split else (0,)
+                    for c in splits:
+                        if not (0 <= c <= bits):
+                            continue
+                        spec_full = spec_rb.replace(adc_coarse_bits=c)
+                        table_rows.append(PointResult(
+                            spec=spec_full,
+                            score=score,
+                            cost=var.hw_cost(spec_full),
+                            variant=vname,
+                        ))
         if not table_rows:
             raise ValueError(f"{name}: empty feasible grid")
         floor = min(p.score for p in table_rows)
         feasible = [p for p in table_rows if p.score <= slack * floor]
         if feasible:
             best = min(
-                feasible, key=lambda p: (p.cost, p.score, p.spec.adc_bits)
+                feasible,
+                key=lambda p: (p.cost, p.score, p.spec.adc_bits, p.variant),
             )
         else:  # nothing within slack: fall back to pure fidelity
             best = min(
-                table_rows, key=lambda p: (p.score, p.cost, p.spec.adc_bits)
+                table_rows,
+                key=lambda p: (p.score, p.cost, p.spec.adc_bits, p.variant),
             )
         layers[name] = LayerCalibration(
             name=name, k=k, n=n,
             spec=best.spec, score=best.score, cost=best.cost,
-            table=tuple(table_rows),
+            table=tuple(table_rows), variant=best.variant,
         )
     return CalibrationResult(
         layers=layers, base=base_spec, grid=grid, slack=slack,
@@ -349,20 +441,78 @@ class CalibrationResult:
     # executes its ADC transfer, so scored == executed.
     pipeline: AnalogPipeline | None = None
 
-    def spec_for(self, k: int, n: int) -> MacroSpec:
-        """The calibrated spec of the layer with matmul shape [k, n].
+    def __post_init__(self) -> None:
+        # One-time-warning memo (frozen dataclass: direct __dict__
+        # write; not a field, so eq/hash/replace are unaffected).
+        self.__dict__["_warned"] = set()
+
+    def _warn_once(self, key: tuple, msg: str) -> None:
+        if key not in self.__dict__["_warned"]:
+            self.__dict__["_warned"].add(key)
+            warnings.warn(msg, stacklevel=3)
+
+    def layer_for(
+        self, k: int, n: int, *, strict: bool = False
+    ) -> LayerCalibration | None:
+        """The calibrated layer with matmul shape [k, n], or None.
 
         Engine backends dispatch per layer by weight shape (the only
         layer identity visible at the matmul boundary). When several
-        calibrated layers share a shape, the most conservative (highest
-        hw_cost) spec wins; unknown shapes fall back to ``base``.
+        calibrated layers share a shape with *different* selections,
+        the most conservative (highest hw_cost) one wins and a
+        one-time warning names the collision; for an unknown shape,
+        ``strict=True`` raises while the default warns once and
+        returns None (callers fall back to ``base``) — so a mis-wired
+        model cannot quietly run uncalibrated.
         """
         hits = [
             lc for lc in self.layers.values() if (lc.k, lc.n) == (k, n)
         ]
         if not hits:
-            return self.base
-        return max(hits, key=lambda lc: (lc.cost, lc.spec.adc_bits)).spec
+            if strict:
+                raise KeyError(
+                    f"no calibrated layer with shape [{k}, {n}]; "
+                    f"calibrated shapes: "
+                    f"{sorted({(lc.k, lc.n) for lc in self.layers.values()})}"
+                )
+            self._warn_once(
+                ("fallback", k, n),
+                f"no calibrated layer with shape [{k}, {n}]: falling "
+                f"back to the uncalibrated base spec "
+                f"({self.base.adc_bits}-bit ADC, "
+                f"{self.base.rows_active} rows). Pass strict=True (or "
+                f"calibrate this layer) if that is not intended.",
+            )
+            return None
+        best = max(hits, key=lambda lc: (lc.cost, lc.spec.adc_bits))
+        if any(
+            (lc.spec, lc.variant) != (best.spec, best.variant)
+            for lc in hits
+        ):
+            self._warn_once(
+                ("collision", k, n),
+                f"{len(hits)} calibrated layers share shape [{k}, {n}] "
+                f"with different operating points "
+                f"({sorted(lc.name for lc in hits)}); executing all of "
+                f"them at the most conservative one "
+                f"('{best.name}': {best.variant}, "
+                f"{best.spec.adc_bits}-bit, {best.spec.rows_active} rows).",
+            )
+        return best
+
+    def spec_for(self, k: int, n: int, *, strict: bool = False) -> MacroSpec:
+        """The calibrated spec of the layer with matmul shape [k, n].
+
+        Thin wrapper over :meth:`layer_for`; unknown shapes fall back
+        to ``base`` (with a one-time warning) unless ``strict``.
+        """
+        lc = self.layer_for(k, n, strict=strict)
+        return self.base if lc is None else lc.spec
+
+    def variant_for(self, k: int, n: int, *, strict: bool = False) -> str:
+        """The winning macro variant of the layer with shape [k, n]."""
+        lc = self.layer_for(k, n, strict=strict)
+        return "p8t" if lc is None else lc.variant
 
     def operating_point(self) -> tuple[int, int]:
         """(adc_bits, rows_active) selected for the majority of layers."""
@@ -389,17 +539,21 @@ class CalibrationResult:
         return name
 
     def summary(self) -> str:
+        from repro.core import energy  # lazy: keep import DAG flat
+
         lines = [
-            f"{'layer':<16} {'KxN':>10} {'adc':>4} {'rows':>5} "
-            f"{'split':>6} {'relerr':>8} {'cost':>6}"
+            f"{'layer':<16} {'KxN':>10} {'variant':>10} {'adc':>4} "
+            f"{'rows':>5} {'split':>6} {'relerr':>8} {'cost':>6} "
+            f"{'TOPS/W':>7}"
         ]
         for lc in self.layers.values():
             s = lc.spec
+            topsw = energy.variant_tops_per_w(s.vdd, lc.variant)
             lines.append(
-                f"{lc.name:<16} {f'{lc.k}x{lc.n}':>10} {s.adc_bits:>4} "
-                f"{s.rows_active:>5} "
+                f"{lc.name:<16} {f'{lc.k}x{lc.n}':>10} {lc.variant:>10} "
+                f"{s.adc_bits:>4} {s.rows_active:>5} "
                 f"{f'{s.adc_coarse_bits}+{s.adc_bits - s.adc_coarse_bits}':>6} "
-                f"{lc.score:>8.4f} {lc.cost:>6.3f}"
+                f"{lc.score:>8.4f} {lc.cost:>6.3f} {topsw:>7.2f}"
             )
         bits, rows = self.operating_point()
         lines.append(
@@ -409,16 +563,41 @@ class CalibrationResult:
         return "\n".join(lines)
 
 
-def _lut_matmul_int(x_codes, w_codes, spec, table, key):
+def _planned_pmac(
+    x_codes: jax.Array, planes: jax.Array, weight_bits: int
+) -> jax.Array:
+    """[M, K] codes x planned grouped planes -> [M, G, B, N] partials.
+
+    Accepts both plan storage forms (unpacked [G, B, rows, N] and
+    bit-packed [G, rows, N] uint8), already grouped at the target
+    ``rows_active`` (``engine.regroup_planes`` reflows mismatches).
+    """
+    m, k = x_codes.shape
+    if planes.ndim == 3:  # packed: 8 planes/byte
+        planes = quant.bitslice_weights(
+            planes, weight_bits
+        ).transpose(1, 0, 2, 3)
+    g, b, rows, n = planes.shape
+    xp = jnp.pad(x_codes.astype(jnp.int32), ((0, 0), (0, g * rows - k)))
+    xp = xp.reshape(m, g, rows)
+    return jnp.einsum("mgr,gbrn->mgbn", xp, planes.astype(jnp.int32))
+
+
+def _lut_matmul_int(x_codes, w_codes, spec, table, key, planes=None):
     """Grouped macro matmul through an explicit ADC lookup table.
 
     The executed transfer is exactly the one :func:`calibrate` scored
     (pipeline-derived LUT; noise injected in the pMAC domain then
     rounded to the nearest level before lookup) — used when the
     calibrated pipeline's ADC differs from the default floor transfer.
+    ``planes`` reuses a plan's pre-grouped bit planes (already at
+    ``spec.rows_active``) instead of re-slicing ``w_codes`` per call.
     """
-    planes = quant.bitslice_weights(w_codes, spec.weight_bits)
-    pmac = _grouped_pmac(x_codes, planes, spec.rows_active)
+    if planes is None:
+        sliced = quant.bitslice_weights(w_codes, spec.weight_bits)
+        pmac = _grouped_pmac(x_codes, sliced, spec.rows_active)
+    else:
+        pmac = _planned_pmac(x_codes, planes, spec.weight_bits)
     x = pmac.astype(jnp.float32)
     if spec.noisy and key is not None:
         x = x + spec.sigma_pmac * jax.random.normal(key, x.shape)
@@ -432,37 +611,57 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
     """An execution backend running each layer at its calibrated spec.
 
     Wraps the shared quantized epilogue around the macro matmul; the
-    operating point is looked up per layer by plan shape at trace time,
-    so one registered backend serves a whole model of per-layer ADC
-    policies. The ADC transfer executed is the one the sweep *scored*:
-    per spec, the pipeline's code table — derived at the same
-    split-normalized spec the sweep used, so even a coarse-bits-
-    sensitive custom ADC stage replays its scored transfer — is
-    compared against the default floor transfer; when equal (the
-    paper's pipeline) the fast behavioral kernel runs, otherwise
-    execution goes through that exact LUT. Hardware-noise injection
-    follows the *execution policy* (``policy.cim.noisy`` + a key), not
-    the calibration base: calibration always scores under noise, but
-    whether the deployed run is noisy is the caller's choice.
+    operating point AND macro variant are looked up per layer by plan
+    shape at trace time, so one registered backend serves a whole
+    model of per-layer ADC policies across macro families. The
+    transfer executed is the one the sweep *scored*:
+
+      * merged-conversion variants (``adder-tree``) execute their own
+        ``matmul_int`` — the same ``merged_transfer_int`` the sweep
+        scored;
+      * per-plane variants compare the pipeline's code table — derived
+        at the same split-normalized spec the sweep used, so even a
+        coarse-bits-sensitive custom ADC stage replays its scored
+        transfer — against the default floor transfer; when equal (the
+        paper's pipeline, and the cell-embedded ADC whose ideal
+        transfer is the same floor) the fast behavioral kernel runs,
+        otherwise execution goes through that exact LUT.
+
+    Plans whose planes were grouped at a different ``rows_active``
+    than the calibrated one are *regrouped* (``engine.regroup_planes``
+    — pure reshape/pad), never silently dropped to the unplanned
+    slicing path. Hardware-noise injection follows the *execution
+    policy* (``policy.cim.noisy`` + a key), not the calibration base:
+    calibration always scores under noise, but whether the deployed
+    run is noisy is the caller's choice.
     """
     from repro.core import adc as adc_lib
 
     # Transfers are precomputed EAGERLY here (register time): inside a
     # jitted caller even constant jnp ops trace, so the table-vs-floor
-    # comparison could not run there. The reachable spec set is finite —
-    # every calibrated layer's spec plus the fallback base.
+    # comparison could not run there. The reachable set is finite —
+    # every calibrated layer's (variant, spec) plus the fallback base.
     pipe = result.pipeline or default_pipeline()
-    table_cache: dict[MacroSpec, tuple[bool, Any]] = {}
-    for spec in {lc.spec for lc in result.layers.values()} | {result.base}:
+    reachable = {
+        (lc.variant, lc.spec) for lc in result.layers.values()
+    } | {("p8t", result.base)}
+    table_cache: dict[tuple[str, MacroSpec], tuple[bool, Any]] = {}
+    for vname, spec in reachable:
+        var = variants_lib.get(vname)
+        if not var.per_plane_adc:
+            continue  # merged conversions execute via matmul_int
+        vpipe = pipe if vname == "p8t" else var.pipeline
         scored = spec.replace(adc_coarse_bits=0, noisy=False)
-        table = np.asarray(adc_code_table(pipe, scored))
+        table = np.asarray(adc_code_table(vpipe, scored))
         pmac = jnp.arange(spec.pmac_levels, dtype=jnp.float32)
         want = np.asarray(adc_lib.adc_transfer_int(pmac, scored))
-        table_cache[spec] = (bool((table == want).all()),
-                             jnp.asarray(table))
+        table_cache[(vname, spec)] = (bool((table == want).all()),
+                                      jnp.asarray(table))
 
     def _int_fn(x_codes, plan, cfg, key):
-        spec = result.spec_for(plan.k, plan.n)
+        lc = result.layer_for(plan.k, plan.n)
+        spec = result.base if lc is None else lc.spec
+        vname = "p8t" if lc is None else lc.variant
         if spec.act_bits != cfg.act_bits:
             raise ValueError(
                 f"calibrated spec act_bits={spec.act_bits} != policy "
@@ -473,14 +672,23 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
                 f"calibrated spec weight_bits={spec.weight_bits} != plan "
                 f"weight_bits={plan.weight_bits}"
             )
-        is_default, table = table_cache[spec]
         run_spec = spec.replace(noisy=cfg.noisy)
-        if not is_default:
-            return _lut_matmul_int(x_codes, plan.codes_i32, run_spec,
-                                   table, key)
         planes = plan.planes
         if planes is not None and planes.shape[-2] != spec.rows_active:
-            planes = None  # plan grouped for a different row count
+            # Plan grouped for a different row count: reflow the
+            # grouped layout instead of dropping to unplanned slicing.
+            planes = engine.regroup_planes(
+                planes, plan.k, spec.rows_active
+            )
+        var = variants_lib.get(vname)
+        if not var.per_plane_adc:
+            return var.matmul_int(
+                x_codes, plan.codes_i32, run_spec, key=key, planes=planes
+            )
+        is_default, table = table_cache[(vname, spec)]
+        if not is_default:
+            return _lut_matmul_int(x_codes, plan.codes_i32, run_spec,
+                                   table, key, planes=planes)
         return matmul_lib.cim_matmul_int(
             x_codes, plan.codes_i32, run_spec, key=key, planes=planes
         )

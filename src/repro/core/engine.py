@@ -194,6 +194,32 @@ def _grouped_planes(
     return p.reshape(b, g, rows, n).transpose(1, 0, 2, 3)
 
 
+def regroup_planes(
+    planes: jax.Array, k: int, to_rows: int
+) -> jax.Array:
+    """Regroup planned bit planes to a different ``rows_active``.
+
+    Plans group their planes at plan-time ``cfg.rows_active``; a
+    calibrated backend may select a different row count per layer.
+    Rather than dropping the planes (falling back to per-call bit
+    slicing — the exact regression this guards against), the grouped
+    layout is reflowed: ungroup along K, trim the old zero padding,
+    re-pad and re-group at ``to_rows``. Works for both storage forms
+    (unpacked [G, B, rows, N] int8 and packed [G, rows, N] uint8) and
+    is pure reshape/pad, so it fuses into the surrounding jit.
+    """
+    g2 = -(-k // to_rows)
+    if planes.ndim == 3:  # packed, 8 planes/byte
+        g, rows, n = planes.shape
+        flat = planes.reshape(g * rows, n)[:k]
+        flat = jnp.pad(flat, ((0, g2 * to_rows - k), (0, 0)))
+        return flat.reshape(g2, to_rows, n)
+    g, b, rows, n = planes.shape
+    flat = planes.transpose(1, 0, 2, 3).reshape(b, g * rows, n)[:, :k]
+    flat = jnp.pad(flat, ((0, 0), (0, g2 * to_rows - k), (0, 0)))
+    return flat.reshape(b, g2, to_rows, n).transpose(1, 0, 2, 3)
+
+
 def plan_weights(
     w: jax.Array,
     cfg: CIMConfig | None = None,

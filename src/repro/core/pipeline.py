@@ -21,11 +21,14 @@ and the Pallas kernel all consume either; ``MacroSpec.from_config`` /
 Why stages: related macros differ exactly here — a fully-parallel
 analog adder with a single-ADC interface (arXiv:2212.04320) is a
 different ADCStage; memory cell-embedded ADCs (arXiv:2307.05944) fold
-ADCStage into AMUStage — and the hardware-aware calibration sweep
-(``core.calibrate``) needs to re-parameterize the ADC per layer without
-rebuilding the surrounding model. ``macro.macro_op`` is now a thin
-composition of the default stages, asserted bit-exact against the
-pre-refactor voltage-domain oracle.
+the conversion into the array — and the hardware-aware calibration
+sweep (``core.calibrate``) needs to re-parameterize the ADC per layer
+without rebuilding the surrounding model. Both of those macro families
+now EXIST as stage sets: see ``core.variants`` (the
+``variants.get("p8t"|"adder-tree"|"cell-adc")`` registry), each with a
+bit-exact integer oracle and a ``CalibrationGrid.variants`` sweep
+axis. ``macro.macro_op`` is a thin composition of the default stages,
+asserted bit-exact against the pre-refactor voltage-domain oracle.
 """
 
 from __future__ import annotations

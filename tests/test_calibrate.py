@@ -30,6 +30,23 @@ def small_layer(k=64, n=8):
     return w, x
 
 
+# Tier-1 wall time: many tests below sweep the SAME deterministic
+# small layer on the default grid; calibrate once and share (each
+# sweep costs seconds — rerunning it per test was the bulk of this
+# file's former runtime).
+_FIXED_LAYER = small_layer()
+_SHARED: dict = {}
+
+
+def shared_result():
+    if "res" not in _SHARED:
+        w, x = _FIXED_LAYER
+        _SHARED["res"] = cal.calibrate(
+            default_pipeline(), {"l": w}, {"l": x}, seed=0
+        )
+    return _SHARED["res"]
+
+
 class TestCodeTable:
     def test_table_matches_integer_transfer(self):
         """The pipeline-derived LUT equals the behavioral ADC transfer."""
@@ -44,8 +61,7 @@ class TestCodeTable:
     def test_full_default_grid_is_representable(self):
         """Every default grid point (incl. 5-bit @ 16 rows via
         heterogeneous reference patterns) gets scored."""
-        w, x = small_layer()
-        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x})
+        res = shared_result()
         points = {p.point[:2] for p in res.layers["l"].table}
         grid = cal.CalibrationGrid()
         assert points == {(b, r) for b in grid.adc_bits
@@ -54,12 +70,12 @@ class TestCodeTable:
     def test_structurally_infeasible_point_skipped(self):
         """Grid points whose in-SRAM reference levels exceed the
         arrays' charge range are dropped, not scored corrupted."""
-        w, x = small_layer()
+        w, x = _FIXED_LAYER
         res = cal.calibrate(
             default_pipeline(), {"l": w}, {"l": x},
             cal.CalibrationGrid(adc_bits=(4, 8), rows_active=(16,),
                                 coarse_bits=(1,)),
-            base=MacroSpec().replace(cutoff=0.0),
+            base=MacroSpec().replace(cutoff=0.0), noisy=False,
         )
         points = {p.point[:2] for p in res.layers["l"].table}
         assert points == {(4, 16)}  # 8-bit: level 255 > 240, skipped
@@ -75,8 +91,7 @@ class TestCodeTable:
 
 class TestCalibrate:
     def test_selects_paper_operating_point_synthetic(self):
-        w, x = small_layer()
-        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x}, seed=0)
+        res = shared_result()
         assert res.operating_point() == (4, 16)
         lc = res.layers["l"]
         assert lc.spec.adc_bits == 4 and lc.spec.rows_active == 16
@@ -85,8 +100,7 @@ class TestCalibrate:
         assert lc.score <= res.slack * floor
 
     def test_emits_per_layer_adc_specs(self):
-        w, x = small_layer()
-        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x})
+        res = shared_result()
         spec = res.layers["l"].adc_spec
         assert spec.bits == 4
         assert spec.comparator_count <= 8  # never pricier than paper's
@@ -94,17 +108,24 @@ class TestCalibrate:
     def test_planned_weights_input(self):
         """Calibration accepts PlannedWeights (codes reused, not re-
         quantized)."""
-        w, x = small_layer()
+        w, x = _FIXED_LAYER
         plan = engine.plan_weights(w, PAPER_OP_16ROWS)
-        r1 = cal.calibrate(default_pipeline(), {"l": plan}, {"l": x})
-        r2 = cal.calibrate(default_pipeline(), {"l": w}, {"l": x})
-        assert r1.layers["l"].spec == r2.layers["l"].spec
+        r1 = cal.calibrate(default_pipeline(), {"l": plan}, {"l": x},
+                           seed=0)
+        assert r1.layers["l"].spec == shared_result().layers["l"].spec
 
     def test_spec_for_fallback_and_shape_match(self):
-        w, x = small_layer()
-        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x})
+        res = shared_result()
         assert res.spec_for(64, 8) == res.layers["l"].spec
-        assert res.spec_for(999, 7) == res.base  # unknown shape
+        with pytest.warns(UserWarning, match="falling back"):
+            assert res.spec_for(999, 7) == res.base  # unknown shape
+
+    def test_spec_for_strict_raises_on_unknown_shape(self):
+        res = shared_result()
+        with pytest.raises(KeyError, match="no calibrated layer"):
+            res.spec_for(999, 7, strict=True)
+        with pytest.raises(KeyError, match="no calibrated layer"):
+            res.layer_for(999, 7, strict=True)
 
     def test_mismatched_k_raises(self):
         w, _ = small_layer(k=64)
@@ -128,10 +149,15 @@ class TestCalibrateResnet:
         params, bn = resnet.init(jax.random.PRNGKey(0), rcfg)
         rng = np.random.default_rng(0)
         images = jnp.asarray(
-            np.maximum(rng.normal(size=(16, 32, 32, 3)), 0), jnp.float32
+            np.maximum(rng.normal(size=(8, 32, 32, 3)), 0), jnp.float32
         )
-        res = cal.calibrate_resnet(params, bn, images, rcfg,
-                                   max_samples=128, n_noise_keys=2)
+        # rows_active=4 never wins the cost race (higher hw_cost at
+        # every bit width) — sweeping it here only paid compile time;
+        # the full paper grid runs in TestCalibrateSlow.
+        res = cal.calibrate_resnet(
+            params, bn, images, rcfg, max_samples=64, n_noise_keys=2,
+            grid=cal.CalibrationGrid(rows_active=(8, 16)),
+        )
         assert res.operating_point() == (4, 16)
         # exempt stem is not calibrated; every conv got a layer entry
         assert "stem" not in res.layers
@@ -154,12 +180,9 @@ class TestCalibrateResnet:
 
 
 class TestAnalogBackend:
-    def _result(self, w, x):
-        return cal.calibrate(default_pipeline(), {"l": w}, {"l": x})
-
     def test_register_and_execute(self):
-        w, x = small_layer()
-        res = self._result(w, x)
+        w, x = _FIXED_LAYER
+        res = shared_result()
         name = res.register("analog-test")
         try:
             policy = CIMPolicy(mode="cim", backend=name,
@@ -178,8 +201,7 @@ class TestAnalogBackend:
             engine._BACKENDS.pop(name, None)
 
     def test_resnet_eval_path_consumes_backend(self):
-        w, x = small_layer()
-        res = self._result(w, x)
+        res = shared_result()
         name = res.register("analog-test")
         try:
             rcfg = resnet.ResNetConfig(
@@ -200,8 +222,7 @@ class TestAnalogBackend:
         """ServeEngine + planned params + calibrated backend: token
         streams equal the behavioral mode at the same operating point
         (calibration base == policy operating point here)."""
-        w, x = small_layer()
-        res = self._result(w, x)
+        res = shared_result()
         name = res.register("analog-test")
         try:
             base = get_config("qwen2_0_5b", smoke=True)
@@ -266,8 +287,8 @@ class TestAnalogBackend:
             engine._BACKENDS.pop(name, None)
 
     def test_act_bits_guard(self):
-        w, x = small_layer()
-        res = self._result(w, x)
+        w, x = _FIXED_LAYER
+        res = shared_result()
         name = res.register("analog-test")
         try:
             bad = CIMPolicy(mode="cim", backend=name,
@@ -281,6 +302,28 @@ class TestAnalogBackend:
 
 @pytest.mark.slow
 class TestCalibrateSlow:
+    def test_resnet_full_paper_grid(self):
+        """The tier-1 resnet sweep on the FULL paper grid (rows 4/8/16)
+        at higher capture fidelity (opt-in: pytest -m slow)."""
+        rcfg = resnet.ResNetConfig(
+            widths=(8, 16), blocks_per_stage=1,
+            cim=CIMPolicy(
+                mode="cim",
+                cim=CIMConfig(rows_active=16, cutoff=0.5, adc_bits=4),
+                act_symmetric=True, act_clip_pct=0.995,
+            ),
+        )
+        params, bn = resnet.init(jax.random.PRNGKey(0), rcfg)
+        rng = np.random.default_rng(0)
+        images = jnp.asarray(
+            np.maximum(rng.normal(size=(16, 32, 32, 3)), 0), jnp.float32
+        )
+        res = cal.calibrate_resnet(params, bn, images, rcfg,
+                                   max_samples=128, n_noise_keys=2)
+        assert res.operating_point() == (4, 16)
+        for lc in res.layers.values():
+            assert lc.spec.rows_active == 16
+
     def test_paper_grid_higher_fidelity(self):
         """The paper grid at higher MC fidelity (opt-in: pytest -m
         slow) still lands on the paper's operating point."""

@@ -11,6 +11,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import adc, dac, matmul, quant
+from repro.core import variants as variants_lib
 from repro.core.params import PAPER_OP_16ROWS, CIMConfig
 from repro.core.pipeline import MacroSpec
 from repro.kernels.ref import cim_matmul_ref
@@ -147,6 +148,48 @@ def test_group_locality_property(seed, cut_groups):
             + matmul.cim_matmul_int(x[:, cut:], w[cut:], cfg))
     np.testing.assert_allclose(np.asarray(full), np.asarray(part),
                                atol=1e-3)
+
+
+@given(
+    rows=st.sampled_from([4, 8, 16]),
+    adc_bits=st.integers(2, 5),
+    data=st.data(),
+)
+@settings(**_SETTINGS)
+def test_merged_single_adc_transfer_monotone_property(rows, adc_bits, data):
+    """The adder-tree variant's merged single-ADC transfer is monotone
+    and bounded for every noise-free spec on the sweep grid."""
+    try:
+        spec = MacroSpec().replace(rows_active=rows, adc_bits=adc_bits,
+                                   noisy=False)
+    except ValueError:
+        return  # bits out of range at this row count
+    mq = variants_lib.merged_quant(spec)
+    lo = data.draw(st.integers(mq.m_min, mq.m_max - 1))
+    hi = data.draw(st.integers(lo, mq.m_max))
+    codes = np.asarray(variants_lib.merged_transfer_int(
+        jnp.asarray([lo, hi], jnp.float32), spec))
+    assert codes[0] <= codes[1]
+    assert mq.code_min <= codes.min() and codes.max() <= mq.code_max
+
+
+@given(
+    vname=st.sampled_from(["p8t", "adder-tree", "cell-adc"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_variant_pipeline_equals_oracle_property(vname, seed):
+    """Every registered macro variant's voltage-domain pipeline matches
+    its bit-exact integer oracle on random codes (noise off)."""
+    var = variants_lib.get(vname)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 16, 16), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (16, 8)), jnp.int32)
+    spec = MacroSpec()
+    state = var.pipeline.run(x, w, spec)
+    np.testing.assert_array_equal(
+        np.asarray(state.outputs), np.asarray(var.oracle_int(x, w, spec))
+    )
 
 
 @given(seed=st.integers(0, 2**31 - 1))

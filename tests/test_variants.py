@@ -1,0 +1,454 @@
+"""Macro-variant stage library (core.variants).
+
+The tentpole invariants:
+  * every registered variant's voltage-domain pipeline is bit-exact
+    against its integer oracle with noise off (the same contract the
+    default pipeline has with the pre-refactor macro_op oracle);
+  * the calibrate sweep's ``variants`` axis scores all families on one
+    grid and the registered backend replays exactly the scored
+    transfer of each layer's winning variant;
+  * the analog backend never silently drops a plan's grouped planes
+    when the calibrated row count differs (regroup, don't fall back).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CIMPolicy
+from repro.core import adc, calibrate as cal, energy, engine, quant
+from repro.core import matmul as matmul_lib
+from repro.core import variants as variants_lib
+from repro.core.params import PAPER_OP_16ROWS, CIMConfig
+from repro.core.pipeline import MacroSpec, default_pipeline
+from repro.models import resnet
+
+RNG = np.random.default_rng(7)
+
+ALL_VARIANTS = ("p8t", "adder-tree", "cell-adc")
+
+SPEC_IDS = ["16r4b", "8r4b", "16r3b", "8r5b"]
+SPECS = [
+    MacroSpec(),
+    MacroSpec().replace(rows_active=8),
+    MacroSpec().replace(adc_bits=3),
+    MacroSpec().replace(rows_active=8, adc_bits=5),
+]
+
+
+def rand_xw(k=16, n=8):
+    x = jnp.asarray(RNG.integers(0, 16, k), jnp.int32)
+    w = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int32)
+    return x, w
+
+
+def small_layer(k=64, n=8, m=32):
+    w = jnp.asarray(RNG.normal(size=(k, n)) * 0.1, jnp.float32)
+    x = jnp.asarray(np.maximum(RNG.normal(size=(m, k)), 0), jnp.float32)
+    return w, x
+
+
+class TestRegistry:
+    def test_registered_names(self):
+        assert set(ALL_VARIANTS) <= set(variants_lib.names())
+
+    def test_get_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown macro variant"):
+            variants_lib.get("nope")
+
+    def test_get_pipeline_stage_names(self):
+        for name in ALL_VARIANTS:
+            pipe = variants_lib.get_pipeline(name)
+            assert pipe.names == ("dac", "amu", "adc", "shift_add")
+
+    def test_duplicate_registration_guard(self):
+        v = dataclasses.replace(variants_lib.P8T, name="tmp-test-variant")
+        variants_lib.register(v)
+        try:
+            with pytest.raises(ValueError, match="already registered"):
+                variants_lib.register(v)
+            variants_lib.register(v, overwrite=True)  # explicit: fine
+        finally:
+            variants_lib._VARIANTS.pop("tmp-test-variant", None)
+
+    def test_hw_cost_ordering_across_variants(self):
+        """The axis the variants compete on: the single-ADC adder tree
+        amortizes one conversion over all B planes; the in-cell SAR
+        beats the flash comparator bank; the paper's flash pays most."""
+        spec = MacroSpec()
+        costs = {
+            name: variants_lib.get(name).hw_cost(spec)
+            for name in ALL_VARIANTS
+        }
+        assert costs["adder-tree"] < costs["cell-adc"] < costs["p8t"]
+        # p8t cost must equal the pre-variant hw_cost definition
+        assert costs["p8t"] == cal.hw_cost(spec)
+
+
+class TestOracleParity:
+    """Voltage-domain pipelines == integer oracles, bit for bit."""
+
+    @pytest.mark.parametrize("vname", ALL_VARIANTS)
+    @pytest.mark.parametrize("spec", SPECS, ids=SPEC_IDS)
+    def test_pipeline_matches_oracle(self, vname, spec):
+        var = variants_lib.get(vname)
+        for _ in range(5):
+            x, w = rand_xw()
+            state = var.pipeline.run(x, w, spec)
+            want = var.oracle_int(x, w, spec)
+            np.testing.assert_array_equal(
+                np.asarray(state.outputs), np.asarray(want)
+            )
+
+    def test_cell_adc_ideal_transfer_equals_p8t_floor(self):
+        """The embedded ADC moves cost/geometry, not the ideal
+        transfer: noise-free codes equal the flash floor transfer."""
+        for spec in SPECS:
+            x, w = rand_xw()
+            got = variants_lib.get("cell-adc").pipeline.run(x, w, spec)
+            want = default_pipeline().run(x, w, spec)
+            np.testing.assert_array_equal(
+                np.asarray(got.adc_codes), np.asarray(want.adc_codes)
+            )
+
+    @pytest.mark.parametrize("vname", ALL_VARIANTS)
+    def test_matmul_int_matches_grouped_oracle(self, vname):
+        """The scalable grouped matmul == per-group oracle sums."""
+        var = variants_lib.get(vname)
+        spec = MacroSpec()
+        rows = spec.rows_active
+        g, m, n = 3, 4, 8
+        x = jnp.asarray(RNG.integers(0, 16, (m, g * rows)), jnp.int32)
+        w = jnp.asarray(
+            RNG.integers(-128, 128, (g * rows, n)), jnp.int32
+        )
+        got = var.matmul_int(x, w, spec.to_config())
+        want = np.zeros((m, n), np.float32)
+        for mi in range(m):
+            for gi in range(g):
+                sl = slice(gi * rows, (gi + 1) * rows)
+                want[mi] += np.asarray(
+                    var.oracle_int(x[mi, sl], w[sl], spec)
+                )
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-3)
+
+    def test_adder_tree_matmul_consumes_planned_planes(self):
+        """Both plan layouts (unpacked + packed) give identical
+        results to the unplanned path."""
+        spec = MacroSpec()
+        cfg = spec.to_config()
+        x = jnp.asarray(RNG.integers(0, 16, (4, 50)), jnp.int32)
+        w = jnp.asarray(RNG.integers(-128, 128, (50, 8)), jnp.int32)
+        want = variants_lib.adder_tree_matmul_int(x, w, spec)
+        for packed in (False, True):
+            planes = engine._grouped_planes(w, cfg, packed=packed)
+            got = variants_lib.adder_tree_matmul_int(
+                x, w, spec, planes=planes
+            )
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestMonotonicity:
+    """Noise-free transfer properties, mirroring test_properties.py
+    (kept hypothesis-free so they run in the base tier-1 env)."""
+
+    @pytest.mark.parametrize("rows,bits", [(16, 4), (8, 4), (8, 3),
+                                           (16, 5), (4, 4)])
+    def test_merged_transfer_monotone_and_bounded(self, rows, bits):
+        spec = MacroSpec().replace(rows_active=rows, adc_bits=bits,
+                                   noisy=False)
+        mq = variants_lib.merged_quant(spec)
+        merged = jnp.arange(mq.m_min, mq.m_max + 1, dtype=jnp.float32)
+        codes = np.asarray(variants_lib.merged_transfer_int(merged, spec))
+        assert np.all(np.diff(codes) >= 0)
+        assert codes.min() >= mq.code_min
+        assert codes.max() <= mq.code_max
+        deq = np.asarray(
+            variants_lib.merged_dequant(jnp.asarray(codes), spec)
+        )
+        assert np.abs(deq).max() <= max(
+            abs(mq.code_min), mq.code_max
+        ) * mq.step
+
+    @pytest.mark.parametrize("rows,bits", [(16, 4), (8, 4), (8, 5)])
+    def test_single_adc_stage_monotone_over_merged_grid(self, rows, bits):
+        """Drive the voltage-domain single-ADC stage across the whole
+        merged grid: codes must be monotone and equal the integer
+        transfer (the voltage roundtrip adds nothing)."""
+        spec = MacroSpec().replace(rows_active=rows, adc_bits=bits,
+                                   noisy=False)
+        mq = variants_lib.merged_quant(spec)
+        merged = jnp.arange(
+            mq.m_min, mq.m_max + 1, 97, dtype=jnp.float32
+        )  # strided: full range, bounded cost
+        v = spec.vdd * (1.0 - (merged - mq.m_min) / mq.levels)
+        from repro.core.pipeline import MacroState
+
+        state = variants_lib.SingleADCStage()(
+            MacroState(v_abl=v), spec
+        )
+        want = variants_lib.merged_transfer_int(merged, spec)
+        np.testing.assert_array_equal(
+            np.asarray(state.adc_codes), np.asarray(want)
+        )
+
+    @pytest.mark.parametrize("rows,bits", [(16, 4), (8, 4), (8, 5)])
+    def test_cell_adc_sar_equals_integer_transfer(self, rows, bits):
+        """The in-array SAR search lands on exactly the behavioral
+        floor transfer for every pMAC level."""
+        from repro.core import dac
+        from repro.core.pipeline import MacroState
+
+        spec = MacroSpec().replace(rows_active=rows, adc_bits=bits,
+                                   noisy=False)
+        pmac = jnp.arange(spec.pmac_levels, dtype=jnp.float32)
+        v = dac.abl_voltage_from_pmac(pmac, spec)
+        state = variants_lib.CellADCStage()(MacroState(v_abl=v), spec)
+        want = adc.adc_transfer_int(pmac, spec)
+        codes = np.asarray(state.adc_codes)
+        np.testing.assert_array_equal(codes, np.asarray(want))
+        assert np.all(np.diff(codes) >= 0)
+
+
+class TestVariantCalibration:
+    """The variant axis of the hardware-aware sweep."""
+
+    def _grid(self, *variants):
+        return cal.CalibrationGrid(
+            adc_bits=(3, 4), rows_active=(8, 16), coarse_bits=(1,),
+            variants=variants or ALL_VARIANTS,
+        )
+
+    def test_table_scores_every_variant(self):
+        w, x = small_layer()
+        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                            self._grid(), noisy=False)
+        lc = res.layers["l"]
+        assert {p.variant for p in lc.table} == set(ALL_VARIANTS)
+        assert lc.variant in ALL_VARIANTS
+        # selection rule: cheapest feasible across the joint table
+        floor = min(p.score for p in lc.table)
+        feasible = [p for p in lc.table if p.score <= res.slack * floor]
+        assert lc.cost == min(p.cost for p in feasible)
+
+    def _replay_reference(self, x, plan, policy, res):
+        """What the calibrated backend must produce: the winning
+        variant's scored transfer inside the shared epilogue."""
+        lc = res.layer_for(plan.k, plan.n)
+        var = variants_lib.get(lc.variant)
+        qa = quant.quantize_acts(
+            x, policy.cim.act_bits,
+            symmetric=policy.act_symmetric, clip_pct=policy.act_clip_pct,
+        )
+        spec = lc.spec.replace(noisy=False)
+        y_int = var.matmul_int(qa.codes, plan.codes_i32, spec)
+        y = y_int - qa.zero_point.astype(jnp.float32) * plan.colsum
+        return y * qa.scale * plan.scale
+
+    @pytest.mark.parametrize("vname", ALL_VARIANTS)
+    def test_backend_replays_scored_transfer(self, vname):
+        """Acceptance: the registered backend executes each layer on
+        its winning variant's transfer — forced per variant here by a
+        single-variant grid."""
+        w, x = small_layer()
+        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                            self._grid(vname), noisy=False)
+        assert res.layers["l"].variant == vname
+        name = res.register("variant-test")
+        try:
+            policy = CIMPolicy(mode="cim", backend=name,
+                               cim=PAPER_OP_16ROWS, act_symmetric=True)
+            plan = engine.plan_weights(w, policy.cim, policy)
+            y = engine.execute(x, plan, policy)
+            want = self._replay_reference(x, plan, policy, res)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+    def test_adder_tree_transfer_differs_from_p8t(self):
+        """The merged conversion is a genuinely different function
+        from the per-plane flash (one clip on the signed sum vs B
+        independent clips), not a relabeling."""
+        w, x = small_layer()
+        res_a = cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                              self._grid("adder-tree"), noisy=False)
+        name = res_a.register("variant-test")
+        try:
+            policy = CIMPolicy(mode="cim", backend=name,
+                               cim=PAPER_OP_16ROWS, act_symmetric=True)
+            plan = engine.plan_weights(w, policy.cim, policy)
+            y_tree = engine.execute(x, plan, policy)
+            spec = res_a.layers["l"].spec
+            y_p8t = engine.execute(x, plan, CIMPolicy(
+                mode="cim", cim=spec.to_config(), act_symmetric=True))
+            assert not np.array_equal(np.asarray(y_tree),
+                                      np.asarray(y_p8t))
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+    def test_cell_adc_backend_equals_behavioral_noise_free(self):
+        """Same ideal transfer as the flash -> the cell-ADC-calibrated
+        backend must agree with the behavioral backend at the same
+        operating point when noise is off."""
+        w, x = small_layer()
+        res = cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                            self._grid("cell-adc"), noisy=False)
+        name = res.register("variant-test")
+        try:
+            policy = CIMPolicy(mode="cim", backend=name,
+                               cim=PAPER_OP_16ROWS, act_symmetric=True)
+            plan = engine.plan_weights(w, policy.cim, policy)
+            y = engine.execute(x, plan, policy)
+            spec = res.layers["l"].spec
+            y_ref = engine.execute(x, plan, CIMPolicy(
+                mode="cim", cim=spec.to_config(), act_symmetric=True))
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+
+class TestPlannedPlanesRegroup:
+    """Satellite regression: a plan grouped at a different row count
+    must be REGROUPED for the calibrated spec, never silently dropped
+    to the unplanned slicing path (core/calibrate.py former
+    ``planes = None`` fallback)."""
+
+    def _spy(self, monkeypatch):
+        seen = {}
+        real = matmul_lib.cim_matmul_int
+
+        def spy(x_codes, w_codes, cfg, *, key=None, planes=None):
+            seen["planes"] = planes
+            return real(x_codes, w_codes, cfg, key=key, planes=planes)
+
+        monkeypatch.setattr(cal.matmul_lib, "cim_matmul_int", spy)
+        return seen
+
+    @pytest.mark.parametrize("pack", [False, True], ids=["unpacked",
+                                                         "packed"])
+    def test_no_fallback_and_parity(self, monkeypatch, pack):
+        w, x = small_layer(k=48)
+        # Calibrate at 8 active rows while the plan groups at 16.
+        res = cal.calibrate(
+            default_pipeline(), {"l": w}, {"l": x},
+            cal.CalibrationGrid(adc_bits=(4,), rows_active=(8,),
+                                coarse_bits=(1,)),
+            noisy=False,
+        )
+        assert res.layers["l"].spec.rows_active == 8
+        name = res.register("regroup-test")
+        try:
+            policy = CIMPolicy(mode="cim", backend=name,
+                               cim=PAPER_OP_16ROWS, act_symmetric=True)
+            plan = engine.plan_weights(w, policy.cim, policy,
+                                       with_planes=True, pack_planes=pack)
+            assert plan.planes.shape[-2] == 16  # grouped for 16 rows
+            seen = self._spy(monkeypatch)
+            y = engine.execute(x, plan, policy)
+            # no silent fallback: the kernel received (regrouped) planes
+            assert seen["planes"] is not None
+            assert seen["planes"].shape[-2] == 8
+            # parity with the unplanned path
+            plan_np = engine.plan_weights(w, policy.cim, policy,
+                                          with_planes=False)
+            y_ref = engine.execute(x, plan_np, policy)
+            np.testing.assert_array_equal(np.asarray(y),
+                                          np.asarray(y_ref))
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+
+class TestEnergyAnchors:
+    def test_p8t_curve_unchanged(self):
+        for vdd, want in ((0.6, 50.07), (0.9, 22.19), (1.2, 9.77)):
+            np.testing.assert_allclose(
+                energy.variant_tops_per_w(vdd, "p8t"), want, rtol=1e-6
+            )
+            np.testing.assert_allclose(
+                energy.macro_report(CIMConfig(vdd=vdd)).tops_per_w,
+                want, rtol=1e-6,
+            )
+
+    def test_variant_anchor_points(self):
+        np.testing.assert_allclose(
+            energy.variant_tops_per_w(0.6, "cell-adc"), 137.5, rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            energy.variant_tops_per_w(0.6, "adder-tree"), 27.38,
+            rtol=1e-6,
+        )
+        # voltage scaling shape is shared: ratios match p8t's curve
+        for v in (0.9, 1.2):
+            np.testing.assert_allclose(
+                energy.variant_tops_per_w(v, "cell-adc") / 137.5,
+                energy.variant_tops_per_w(v, "p8t") / 50.07,
+                rtol=1e-6,
+            )
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(KeyError, match="no energy anchor"):
+            energy.variant_tops_per_w(0.9, "nope")
+
+    def test_cell_adc_geometry_frees_ref_columns(self):
+        cfg = CIMConfig()
+        spec = variants_lib.get("cell-adc").adapt_spec(cfg)
+        assert spec.n_outputs == 10  # 80 cols / 8 bits, no AMU_REF
+        # fewer column tiles -> fewer cycles for the same matmul
+        _, cycles_cell = energy.layer_energy_j(cfg, 1, 64, 80,
+                                               "cell-adc")
+        _, cycles_p8t = energy.layer_energy_j(cfg, 1, 64, 80)
+        assert cycles_cell < cycles_p8t
+
+    def test_summary_reports_tops_per_w(self):
+        w, x = small_layer()
+        res = cal.calibrate(
+            default_pipeline(), {"l": w}, {"l": x},
+            cal.CalibrationGrid(adc_bits=(4,), rows_active=(16,),
+                                coarse_bits=(1,),
+                                variants=ALL_VARIANTS),
+            noisy=False,
+        )
+        s = res.summary()
+        assert "TOPS/W" in s and "variant" in s
+
+
+class TestEndToEndResnet:
+    def test_variant_calibrated_backend_through_resnet(self):
+        """Acceptance: the variant-axis sweep on a resnet taps every
+        conv, selects per-layer winners, and the registered backend
+        executes through the unchanged resnet eval path."""
+        rcfg = resnet.ResNetConfig(
+            widths=(8,), blocks_per_stage=1,
+            cim=CIMPolicy(mode="cim", cim=PAPER_OP_16ROWS,
+                          act_symmetric=True),
+        )
+        params, bn = resnet.init(jax.random.PRNGKey(2), rcfg)
+        images = jnp.asarray(RNG.normal(size=(4, 32, 32, 3)),
+                             jnp.float32)
+        res = cal.calibrate_resnet(
+            params, bn, images, rcfg,
+            grid=cal.CalibrationGrid(adc_bits=(3, 4),
+                                     rows_active=(8, 16),
+                                     coarse_bits=(1,),
+                                     variants=ALL_VARIANTS),
+            max_samples=32, n_noise_keys=1,
+        )
+        assert res.layers  # every conv got an entry
+        for lc in res.layers.values():
+            assert lc.variant in ALL_VARIANTS
+            assert {p.variant for p in lc.table} == set(ALL_VARIANTS)
+        name = res.register("variant-resnet-test")
+        try:
+            rcfg2 = dataclasses.replace(
+                rcfg,
+                cim=dataclasses.replace(rcfg.cim, backend=name),
+            )
+            planned = resnet.plan_params(params, rcfg2.cim)
+            logits, _ = resnet.forward(planned, bn, images, rcfg2)
+            assert logits.shape == (4, 10)
+            assert bool(jnp.all(jnp.isfinite(logits)))
+        finally:
+            engine._BACKENDS.pop(name, None)
