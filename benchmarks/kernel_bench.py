@@ -1,9 +1,17 @@
-"""GPQ Pallas kernel benchmark.
+"""GPQ Pallas kernel + dispatch-table benchmark.
 
 CPU wall-times compare formulations of the SAME semantics (interpret
 mode is a correctness vehicle, not a perf claim); the TPU-relevant
 output is the analytic VMEM/roofline of the kernel's BlockSpec tiling,
 reported per block configuration.
+
+``kernels_main`` exercises the variant-aware dispatch subsystem: every
+macro variant through every registered backend (parity + wall time),
+the no-silent-fallback guard check.sh relies on (an explicit Pallas
+request must never resolve to the jnp scan), and the tuned-vs-heuristic
+dispatch delta on a decode-shaped cell — the autotuner's measured
+winner vs the untuned default, through the same ``dispatch.dispatch``
+entry point.
 """
 
 import jax
@@ -14,6 +22,7 @@ from benchmarks.common import Timer, emit
 from repro.configs.base import CIMPolicy
 from repro.core import engine, matmul
 from repro.core.params import PAPER_OP_16ROWS
+from repro.kernels import autotune, dispatch
 from repro.kernels.cim_mac import gpq_matmul
 from repro.kernels.ref import cim_matmul_ref
 
@@ -137,6 +146,105 @@ def planned_main(quick: bool = False, smoke: bool = False) -> None:
         )
 
 
+def _rand_codes(rng, m, k, n, cfg):
+    x = jnp.asarray(rng.integers(0, cfg.act_levels, (m, k)), jnp.int32)
+    lo = -(1 << (cfg.weight_bits - 1))
+    hi = 1 << (cfg.weight_bits - 1)
+    w = jnp.asarray(rng.integers(lo, hi, (k, n)), jnp.int32)
+    return x, w
+
+
+def kernels_main(quick: bool = False, smoke: bool = False) -> None:
+    """Variant-aware dispatch: parity, fallback guard, tuned delta.
+
+    Raises (failing the harness) if an explicit ``backend="pallas"``
+    request for a variant with a registered Pallas kernel resolves to
+    anything else — the no-silent-fallback guard scripts/check.sh runs.
+    """
+    cfg = PAPER_OP_16ROWS
+    rng = np.random.default_rng(0)
+
+    # --- every variant through every registered backend: parity + time
+    m, k, n = (8, 64, 16) if smoke else (16, 256, 64)
+    x, w = _rand_codes(rng, m, k, n, cfg)
+    for variant in ("p8t", "adder-tree", "cell-adc"):
+        base = None
+        for backend in dispatch.backends_for(variant):
+            fn = jax.jit(
+                lambda xx, ww, _v=variant, _b=backend: dispatch.dispatch(
+                    xx, ww, cfg, variant=_v, backend=_b
+                )
+            )
+            y = jax.block_until_ready(fn(x, w))
+            with Timer() as t:
+                jax.block_until_ready(fn(x, w))
+            if base is None:
+                base = np.asarray(y)
+            exact = bool(np.array_equal(np.asarray(y), base))
+            emit(
+                f"kernels_{variant}_{backend}", t.us,
+                f"m={m};k={k};n={n};bit_exact_vs_scan={exact}",
+            )
+            if not exact:
+                raise RuntimeError(
+                    f"{variant}/{backend} diverged from the scan oracle"
+                )
+
+    # --- no-silent-fallback guard (spy on the resolution log)
+    for variant in ("p8t", "adder-tree", "cell-adc"):
+        if not dispatch.has_pallas(variant):
+            raise RuntimeError(f"variant '{variant}' lost its Pallas kernel")
+        with dispatch.record_resolutions() as log:
+            dispatch.dispatch(x, w, cfg, variant=variant, backend="pallas")
+        bad = [r for r in log if r.key.backend != "pallas"]
+        if bad or not log:
+            raise RuntimeError(
+                f"explicit pallas request for '{variant}' resolved to "
+                f"{[r.key.backend for r in log]} — silent fallback"
+            )
+    emit("kernels_no_silent_fallback", 0.0, "variants=p8t,adder-tree,cell-adc")
+
+    # --- tuned vs heuristic dispatch on a decode-shaped cell
+    m, k, n = 8, (128 if smoke else 512), (128 if smoke else 512)
+    x, w = _rand_codes(rng, m, k, n, cfg)
+    reps = 2 if smoke else (5 if quick else 20)
+
+    autotune.clear_active()  # heuristic baseline (no pinned winners)
+    untuned = jax.jit(lambda xx, ww: dispatch.dispatch(xx, ww, cfg))
+    with dispatch.record_resolutions() as log:
+        y_un = jax.block_until_ready(untuned(x, w))
+    default_backend = log[0].key.backend
+    with Timer() as t_un:
+        for _ in range(reps):
+            jax.block_until_ready(untuned(x, w))
+
+    # smoke (CI) keeps the checked-in results/ artifact untouched; the
+    # quick/full profiles refresh it.
+    cache = autotune.autotune(
+        [(m, k, n)], cfg, variants=("p8t",), reps=reps, save=not smoke,
+    )
+    win = cache.lookup("p8t", dispatch.shape_cell(m, k, n))
+    tuned = jax.jit(lambda xx, ww: dispatch.dispatch(xx, ww, cfg))
+    y_tu = jax.block_until_ready(tuned(x, w))
+    with Timer() as t_tu:
+        for _ in range(reps):
+            jax.block_until_ready(tuned(x, w))
+    # Re-enable the lazy file-cache load for whatever runs after this
+    # bench in the same process (clear_active would pin "no cache").
+    autotune.reload_active()
+
+    un_us, tu_us = t_un.us / reps, t_tu.us / reps
+    exact = bool(np.array_equal(np.asarray(y_un), np.asarray(y_tu)))
+    emit("kernels_dispatch_untuned", un_us,
+         f"m={m};k={k};n={n};backend={default_backend}")
+    emit(
+        "kernels_dispatch_tuned", tu_us,
+        f"backend={win.backend};speedup={un_us / max(tu_us, 1e-9):.2f}x;"
+        f"bit_exact={exact}",
+    )
+
+
 if __name__ == "__main__":
     main()
     planned_main()
+    kernels_main()

@@ -33,6 +33,7 @@ ALL = {
     "table1": table1_accuracy.main,
     "table2": table2_summary.main,
     "kernel": kernel_bench.main,
+    "kernels": kernel_bench.kernels_main,
     "plan": kernel_bench.planned_main,
     "roofline": roofline.main,
     "variants": variants_bench.main,

@@ -22,8 +22,11 @@ if [ "${elapsed}" -gt "${TIER1_BUDGET_S}" ]; then
     echo "FAIL: tier-1 exceeded the ${TIER1_BUDGET_S}s wall-time budget" >&2
     exit 1
 fi
-# Smoke the plan/execute and macro-variant benchmark paths end to end
-# (CI-scale shapes): catches engine/backend/variant regressions the
-# unit tests abstract over.
+# Smoke the plan/execute, macro-variant and kernel-dispatch benchmark
+# paths end to end (CI-scale shapes): catches engine/backend/variant
+# regressions the unit tests abstract over. The `kernels` bench also
+# enforces the no-silent-fallback guard — it RAISES (failing this
+# script) if an explicit Pallas request for any variant with a
+# registered Pallas kernel ever resolves to the jnp scan.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/run.py --only plan,variants --smoke
+    python benchmarks/run.py --only plan,variants,kernels --smoke

@@ -41,7 +41,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dac, engine, quant
-from repro.core import matmul as matmul_lib
+# Kept as a module alias: execution now routes through
+# kernels.dispatch (which late-binds matmul.cim_matmul_int), and test
+# spies patch the shared module attribute via `cal.matmul_lib`.
+from repro.core import matmul as matmul_lib  # noqa: F401
 from repro.core import variants as variants_lib
 from repro.core.params import CIMConfig
 from repro.core.pipeline import (
@@ -616,16 +619,20 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
     model of per-layer ADC policies across macro families. The
     transfer executed is the one the sweep *scored*:
 
-      * merged-conversion variants (``adder-tree``) execute their own
-        ``matmul_int`` — the same ``merged_transfer_int`` the sweep
-        scored;
+      * merged-conversion variants (``adder-tree``) execute their
+        variant's registered transfer through ``kernels.dispatch`` —
+        the same ``merged_transfer_int`` semantics the sweep scored,
+        on whichever backend (scan / ref / Pallas) the tuning cache or
+        heuristics pick for the shape;
       * per-plane variants compare the pipeline's code table — derived
         at the same split-normalized spec the sweep used, so even a
         coarse-bits-sensitive custom ADC stage replays its scored
         transfer — against the default floor transfer; when equal (the
         paper's pipeline, and the cell-embedded ADC whose ideal
-        transfer is the same floor) the fast behavioral kernel runs,
-        otherwise execution goes through that exact LUT.
+        transfer is the same floor) execution goes through the
+        dispatch table under the variant's name, otherwise through
+        that exact LUT (a calibration-specific transfer no generic
+        kernel implements).
 
     Plans whose planes were grouped at a different ``rows_active``
     than the calibrated one are *regrouped* (``engine.regroup_planes``
@@ -636,6 +643,7 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
     run is noisy is the caller's choice.
     """
     from repro.core import adc as adc_lib
+    from repro.kernels import dispatch  # lazy-ish: no pallas import here
 
     # Transfers are precomputed EAGERLY here (register time): inside a
     # jitted caller even constant jnp ops trace, so the table-vs-floor
@@ -681,16 +689,14 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
                 planes, plan.k, spec.rows_active
             )
         var = variants_lib.get(vname)
-        if not var.per_plane_adc:
-            return var.matmul_int(
-                x_codes, plan.codes_i32, run_spec, key=key, planes=planes
-            )
-        is_default, table = table_cache[(vname, spec)]
-        if not is_default:
-            return _lut_matmul_int(x_codes, plan.codes_i32, run_spec,
-                                   table, key, planes=planes)
-        return matmul_lib.cim_matmul_int(
-            x_codes, plan.codes_i32, run_spec, key=key, planes=planes
+        if var.per_plane_adc:
+            is_default, table = table_cache[(vname, spec)]
+            if not is_default:
+                return _lut_matmul_int(x_codes, plan.codes_i32, run_spec,
+                                       table, key, planes=planes)
+        return dispatch.dispatch(
+            x_codes, plan.codes_i32, run_spec,
+            variant=vname, key=key, planes=planes,
         )
 
     return engine.quantized_backend(_int_fn)

@@ -152,16 +152,18 @@ def _pack_planes_default(k: int, cfg: CIMConfig) -> bool:
 
 
 def _grouped_planes_shape(
-    k: int, n: int, cfg: CIMConfig, packed: bool = False
+    k: int, n: int, cfg: CIMConfig, packed: bool = False,
+    rows: int | None = None,
 ) -> tuple[int, ...]:
-    rows = cfg.rows_active
+    rows = rows or cfg.rows_active
     if packed:
         return (-(-k // rows), rows, n)
     return (-(-k // rows), cfg.weight_bits, rows, n)
 
 
 def _grouped_planes(
-    codes: jax.Array, cfg: CIMConfig, packed: bool = False
+    codes: jax.Array, cfg: CIMConfig, packed: bool = False,
+    rows: int | None = None,
 ) -> jax.Array:
     """[K, N] signed codes -> grouped bit planes.
 
@@ -174,9 +176,13 @@ def _grouped_planes(
     byte is plane b, i.e. the low ``weight_bits`` two's-complement bits
     of the code; the behavioral kernel bit-slices one [rows, N] tile per
     scan step, so peak memory never sees the unpacked tensor.
+
+    ``rows`` overrides the grouping row count (a layer's *calibrated*
+    ``rows_active`` may differ from the plan cfg's — grouping at it up
+    front makes the analog backend's regroup a no-op).
     """
     k, n = codes.shape
-    rows = cfg.rows_active
+    rows = rows or cfg.rows_active
     g = -(-k // rows)
     if packed:
         if cfg.weight_bits > 8:
@@ -228,6 +234,7 @@ def plan_weights(
     keep_fp: bool | None = None,
     with_planes: bool | None = None,
     pack_planes: bool | None = None,
+    group_rows: int | None = None,
 ) -> PlannedWeights:
     """Precompute the weight-stationary state for ``execute``.
 
@@ -252,6 +259,10 @@ def plan_weights(
         instead of unpacked [G, B, rows, N] int8. Default: packed for
         large-K layers (K >= PACK_PLANES_MIN_K). Execution output is
         identical either way (parity-tested).
+      group_rows: group the planes at this row count instead of
+        ``cfg.rows_active`` — used by ``plan_params(calibration=...)``
+        to pre-group each layer at its *calibrated* ``rows_active`` so
+        the analog backend's ``regroup_planes`` reshape never runs.
     """
     if cfg is None:
         cfg = policy.cim if policy is not None else CIMConfig()
@@ -276,7 +287,9 @@ def plan_weights(
             )
         if pack_planes is None:
             pack_planes = _pack_planes_default(qw.codes.shape[0], cfg)
-        planes = _grouped_planes(qw.codes, cfg, packed=pack_planes)
+        planes = _grouped_planes(
+            qw.codes, cfg, packed=pack_planes, rows=group_rows
+        )
     return PlannedWeights(
         codes=codes,
         scale=qw.scale.astype(jnp.float32),
@@ -376,16 +389,31 @@ def _exact_int(x_codes, plan, cfg, key):
 
 
 def _behavioral_int(x_codes, plan, cfg, key):
-    return matmul_lib.cim_matmul_int(
-        x_codes, plan.codes_i32, cfg, key=key, planes=plan.planes
+    # Route through the variant-aware dispatch table: the backend
+    # (scan / ref / pallas) and its block sizes resolve per shape from
+    # the autotune cache, falling back to the heuristics (noise -> the
+    # scan transfer; otherwise scan off-TPU) that reproduce the
+    # pre-dispatch behavior exactly.
+    from repro.kernels import dispatch  # lazy: optional pallas dep
+
+    planes = plan.planes
+    if planes is not None and planes.shape[-2] != cfg.rows_active:
+        # Plan grouped for a different row count (e.g. a calibration-
+        # grouped plan executed under a plain behavioral policy):
+        # reflow rather than fail deep inside the kernel.
+        planes = regroup_planes(planes, plan.k, cfg.rows_active)
+    return dispatch.dispatch(
+        x_codes, plan.codes_i32, cfg, key=key, planes=planes
     )
 
 
 def _pallas_int(x_codes, plan, cfg, key):
     del key  # kernel is noiseless by design (production inference path)
-    from repro.kernels import ops as kernel_ops  # lazy: optional dep
+    from repro.kernels import dispatch  # lazy: optional dep
 
-    return kernel_ops.cim_matmul_kernel(x_codes, plan.codes_i32, cfg)
+    return dispatch.dispatch(
+        x_codes, plan.codes_i32, cfg, backend="pallas", planes=plan.planes
+    )
 
 
 register_backend("fp", _fp_backend)
@@ -491,7 +519,8 @@ _PLAN_MIN_DIM = 2
 
 
 def _plan_sds_leaf(
-    v, cfg: CIMConfig, keep_fp: bool, with_planes: bool
+    v, cfg: CIMConfig, keep_fp: bool, with_planes: bool,
+    group_rows: int | None = None,
 ) -> PlannedWeights:
     """Shape/dtype stand-in plan for dry-run (ShapeDtypeStruct) trees.
 
@@ -503,7 +532,9 @@ def _plan_sds_leaf(
     if with_planes:
         packed = _pack_planes_default(v.shape[-2], cfg)
         planes = jax.ShapeDtypeStruct(
-            _grouped_planes_shape(v.shape[-2], v.shape[-1], cfg, packed),
+            _grouped_planes_shape(
+                v.shape[-2], v.shape[-1], cfg, packed, rows=group_rows
+            ),
             jnp.uint8 if packed else jnp.int8,
         )
     return PlannedWeights(
@@ -523,6 +554,7 @@ def plan_params(
     *,
     keep_fp: bool | None = None,
     with_planes: bool | None = None,
+    calibration: Any | None = None,
     weight_keys: frozenset[str] = DEFAULT_WEIGHT_KEYS,
     exempt_keys: frozenset[str] = DEFAULT_EXEMPT_KEYS,
     exempt_modules: frozenset[str] = DEFAULT_EXEMPT_MODULES,
@@ -537,6 +569,12 @@ def plan_params(
         digitally-exempt matmuls stay bit-identical, and the CIM
         layers reuse codes/colsums/planes across every decode step.
 
+    ``calibration`` (a ``core.calibrate.CalibrationResult``; duck-typed
+    to keep the import DAG one-way) pre-groups each layer's planes at
+    its *calibrated* ``rows_active``, looked up by [K, N] shape — the
+    calibrated backend then consumes every plan as-is instead of
+    tracing the one-off ``regroup_planes`` reshape on first execute.
+
     Works on concrete arrays AND ShapeDtypeStruct trees (dry-run).
     Embeddings/norms/etc. (``exempt_keys``/``exempt_modules``) pass
     through untouched.
@@ -547,7 +585,7 @@ def plan_params(
     if keep_fp is None:
         keep_fp = mode != "fp"
     if with_planes is None:
-        with_planes = mode in ("cim", "behavioral")
+        with_planes = mode in ("cim", "behavioral") or calibration is not None
 
     def eligible(k, v):
         return (
@@ -556,6 +594,12 @@ def plan_params(
             and hasattr(v, "ndim")
             and v.ndim >= _PLAN_MIN_DIM
         )
+
+    def rows_for(shape) -> int | None:
+        if calibration is None or len(shape) != 2:
+            return None
+        lc = calibration.layer_for(shape[-2], shape[-1])
+        return None if lc is None else lc.spec.rows_active
 
     def walk(node):
         if not isinstance(node, dict):
@@ -570,11 +614,13 @@ def plan_params(
                 out[k] = _plan_sds_leaf(
                     v, cfg, keep_fp,
                     with_planes and len(v.shape) == 2,
+                    group_rows=rows_for(v.shape),
                 )
             else:
                 out[k] = plan_weights(
                     v, cfg, policy, keep_fp=keep_fp,
                     with_planes=with_planes and v.ndim == 2,
+                    group_rows=rows_for(v.shape),
                 )
         return out
 

@@ -250,6 +250,81 @@ def cache_shardings(cache_tree: Any, mesh: Mesh | None) -> Any:
     return jax.tree_util.tree_map_with_path(one, cache_tree)
 
 
+# ---------------------------------------------------------------------------
+# Planned-weight (PlannedWeights) sharding: plan-aware serving
+# ---------------------------------------------------------------------------
+
+
+def _last_dim_model(shape: tuple[int, ...], mesh: Mesh) -> NamedSharding:
+    """Shard the trailing (output-channel) dim over 'model' if divisible."""
+    axs = _greedy_axes(shape[-1], ("model",), mesh, set())
+    return NamedSharding(
+        mesh, PartitionSpec(*((None,) * (len(shape) - 1)), _entry(axs))
+    )
+
+
+def plan_shardings(plan: Any, mesh: Mesh) -> Any:
+    """NamedShardings for one ``engine.PlannedWeights``.
+
+    Every stored-weight tensor is tensor-parallel over the model axis
+    on its output-channel (N) dim — codes [..., K, N], kept fp weights,
+    the [..., 1, N] epilogue vectors, and the pre-grouped ``planes`` in
+    BOTH storage forms (unpacked [G, B, rows, N] int8 and bit-packed
+    [G, rows, N] uint8): the group/plane/row dims are the contraction
+    structure and must stay local to a shard, while N is embarrassingly
+    parallel — each model shard holds the planes of its own output
+    columns, so planned decode scales across devices without
+    re-planning (divisibility-aware: an indivisible N degrades to
+    replicated, like every rule here).
+    """
+    import dataclasses as _dc
+
+    def one(v):
+        return None if v is None else _last_dim_model(tuple(v.shape), mesh)
+
+    return _dc.replace(
+        plan,
+        codes=one(plan.codes),
+        scale=one(plan.scale),
+        colsum=one(plan.colsum),
+        w=one(plan.w),
+        planes=one(plan.planes),
+    )
+
+
+def planned_param_shardings(
+    planned_tree: Any, mesh: Mesh | None
+) -> Any:
+    """Shardings for a whole ``engine.plan_params`` tree.
+
+    PlannedWeights leaves get :func:`plan_shardings`; unplanned leaves
+    (norms, embeddings, biases) stay replicated — weight-stationary
+    inference replicates them by design (see INFERENCE_RULES).
+    """
+    if mesh is None:
+        return None
+    from repro.core.engine import PlannedWeights  # lazy: keep import light
+
+    def one(node):
+        if isinstance(node, PlannedWeights):
+            return plan_shardings(node, mesh)
+        return replicated(mesh)
+
+    return jax.tree.map(
+        one, planned_tree,
+        is_leaf=lambda x: isinstance(x, PlannedWeights),
+    )
+
+
+def shard_planned(planned_tree: Any, mesh: Mesh | None) -> Any:
+    """device_put a planned tree under :func:`planned_param_shardings`."""
+    if mesh is None:
+        return planned_tree
+    return jax.device_put(
+        planned_tree, planned_param_shardings(planned_tree, mesh)
+    )
+
+
 def opt_state_axes(param_axes: Any, opt_state) -> Any:
     """AdamW m/v inherit the param axes; step/rng are replicated."""
     from repro.optim.adamw import AdamWState

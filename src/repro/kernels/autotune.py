@@ -1,0 +1,371 @@
+"""Per-(arch, variant, shape-cell) kernel autotuning with a JSON cache.
+
+The dispatch heuristics pick a safe default; this module replaces them
+with *measured* winners: :func:`sweep_shape` times every registered
+backend (and, for Pallas, every candidate block size) of one variant
+at one representative shape, :func:`autotune` runs the sweep over a
+shape/variant grid, and the winners persist to a JSON cache under
+``results/autotune/<arch>.json`` that ``dispatch`` consults before its
+heuristics — so a tuned deployment keeps its per-shape choices across
+processes with a deterministic re-load path (no re-timing at serve
+time).
+
+Cache file format (version 1)::
+
+    {
+      "version": 1,
+      "arch": "cpu",
+      "entries": {
+        "p8t/m8_k1024_n1024":  {"backend": "ref",
+                                "block": null, "us": 812.4},
+        "p8t/m128_k1024_n1024": {"backend": "pallas",
+                                 "block": [128, 128, 128], "us": 95.1}
+      }
+    }
+
+Keys are ``<variant>/m<cell>_k<cell>_n<cell>`` over the power-of-two
+cells of :func:`dispatch.shape_cell`; ``block`` is the pinned Pallas
+tiling (null for jnp backends). Entries are written sorted, so the
+same sweep produces byte-identical files (round-trip determinism is
+property-tested).
+
+Timing is injectable (``measure=``) so tests pin winners with a
+deterministic proxy; the default measures best-of-``reps`` wall time
+of a jitted call. Candidates that fail to trace/execute at the shape
+(e.g. a depth-guarded Pallas kernel) are skipped, never winners.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import CIMConfig
+from repro.core.pipeline import MacroSpec, as_spec
+from repro.kernels import dispatch
+
+CACHE_VERSION = 1
+
+# Pallas tiling candidates swept per shape (bk is clamped to a multiple
+# of rows_active by the dispatch adapter).
+PALLAS_BLOCKS: tuple[tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (64, 128, 128),
+    (32, 64, 128),
+)
+
+Candidate = tuple[str, tuple[int, int, int] | None]
+# measure(candidate, run) -> seconds for one call; `run` executes the
+# (already warmed/compiled) candidate once, blocking on the result.
+MeasureFn = Callable[[Candidate, Callable[[], Any]], float]
+
+
+def default_cache_dir() -> pathlib.Path:
+    """results/autotune under the repo root (env-overridable)."""
+    env = os.environ.get("REPRO_AUTOTUNE_DIR")
+    if env:
+        return pathlib.Path(env)
+    return (
+        pathlib.Path(__file__).resolve().parents[3] / "results" / "autotune"
+    )
+
+
+def cache_path(arch: str) -> pathlib.Path:
+    return default_cache_dir() / f"{arch}.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Winner:
+    """The pinned choice for one (variant, shape cell)."""
+
+    backend: str
+    block: tuple[int, int, int] | None
+    us: float
+
+    def to_json(self) -> dict:
+        return {
+            "backend": self.backend,
+            "block": list(self.block) if self.block else None,
+            "us": self.us,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "Winner":
+        block = d.get("block")
+        return cls(
+            backend=d["backend"],
+            block=tuple(block) if block else None,
+            us=float(d.get("us", 0.0)),
+        )
+
+
+def cell_id(variant: str, cell: tuple[int, int, int]) -> str:
+    return f"{variant}/m{cell[0]}_k{cell[1]}_n{cell[2]}"
+
+
+@dataclasses.dataclass
+class TuningCache:
+    """The per-arch winner table, JSON round-trippable."""
+
+    arch: str
+    entries: dict[str, Winner] = dataclasses.field(default_factory=dict)
+
+    def lookup(
+        self, variant: str, cell: tuple[int, int, int]
+    ) -> Winner | None:
+        return self.entries.get(cell_id(variant, cell))
+
+    def put(
+        self, variant: str, cell: tuple[int, int, int], winner: Winner
+    ) -> None:
+        self.entries[cell_id(variant, cell)] = winner
+
+    def to_json(self) -> dict:
+        return {
+            "version": CACHE_VERSION,
+            "arch": self.arch,
+            "entries": {
+                k: self.entries[k].to_json() for k in sorted(self.entries)
+            },
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "TuningCache":
+        if d.get("version") != CACHE_VERSION:
+            raise ValueError(
+                f"tuning cache version {d.get('version')} != "
+                f"{CACHE_VERSION}; re-run kernels.autotune.autotune"
+            )
+        return cls(
+            arch=d.get("arch", "unknown"),
+            entries={
+                k: Winner.from_json(v) for k, v in d["entries"].items()
+            },
+        )
+
+    def save(self, path: pathlib.Path | str | None = None) -> pathlib.Path:
+        path = pathlib.Path(path) if path else cache_path(self.arch)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1, sort_keys=True))
+        return path
+
+    @classmethod
+    def load(
+        cls,
+        arch: str | None = None,
+        path: pathlib.Path | str | None = None,
+    ) -> "TuningCache | None":
+        """Deterministic re-load: None when no cache was ever written."""
+        path = pathlib.Path(path) if path else cache_path(
+            arch or jax.default_backend()
+        )
+        if not path.exists():
+            return None
+        return cls.from_json(json.loads(path.read_text()))
+
+
+# ---------------------------------------------------------------------------
+# The active cache dispatch consults
+# ---------------------------------------------------------------------------
+
+_active: TuningCache | None = None
+_loaded = False
+
+
+def active_cache() -> TuningCache | None:
+    """The cache dispatch consults; lazily loaded from results/ once.
+
+    The file is an optional *hint*: a stale-version or corrupt cache
+    must degrade to the dispatch heuristics (with a one-time warning),
+    never brick serving. Explicit ``TuningCache.load`` calls keep
+    their strict errors.
+    """
+    global _active, _loaded
+    if not _loaded:
+        try:
+            _active = TuningCache.load()
+        except Exception as e:  # noqa: BLE001 - degrade, don't brick
+            import warnings
+
+            warnings.warn(
+                f"ignoring unreadable tuning cache "
+                f"({cache_path(jax.default_backend())}): {e}; "
+                "re-run kernels.autotune.autotune to regenerate",
+                stacklevel=2,
+            )
+            _active = None
+        _loaded = True
+    return _active
+
+
+def set_active(cache: TuningCache | None) -> None:
+    global _active, _loaded
+    _active, _loaded = cache, True
+
+
+def clear_active() -> None:
+    """Disable tuned dispatch for this process (heuristics only)."""
+    set_active(None)
+
+
+def reload_active() -> TuningCache | None:
+    """Force a re-read from the default cache path."""
+    global _loaded
+    _loaded = False
+    return active_cache()
+
+
+def lookup(variant: str, cell: tuple[int, int, int]) -> Winner | None:
+    cache = active_cache()
+    return None if cache is None else cache.lookup(variant, cell)
+
+
+# ---------------------------------------------------------------------------
+# Sweeping
+# ---------------------------------------------------------------------------
+
+
+def default_candidates(
+    variant: str,
+    *,
+    blocks: Sequence[tuple[int, int, int]] = PALLAS_BLOCKS,
+    include_pallas: bool | None = None,
+) -> tuple[Candidate, ...]:
+    """Candidate (backend, block) pairs for one variant, stable order.
+
+    ``include_pallas`` defaults to native-lowering only (TPU): in
+    interpret mode the kernel is a correctness vehicle, and timing it
+    would never pin it anyway — skipping keeps sweeps fast on CPU.
+    Pass True to sweep it regardless.
+    """
+    if include_pallas is None:
+        include_pallas = jax.default_backend() == "tpu"
+    cands: list[Candidate] = []
+    for backend in dispatch.backends_for(variant):
+        if dispatch.lookup(variant, backend) is None:
+            continue
+        if backend == "pallas":
+            if include_pallas:
+                cands.extend(("pallas", b) for b in blocks)
+        else:
+            cands.append((backend, None))
+    return tuple(cands)
+
+
+def _wall_measure(reps: int) -> MeasureFn:
+    def measure(candidate: Candidate, run: Callable[[], Any]) -> float:
+        del candidate
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return measure
+
+
+def sweep_shape(
+    variant: str,
+    spec: CIMConfig | MacroSpec | None,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    candidates: Sequence[Candidate] | None = None,
+    measure: MeasureFn | None = None,
+    reps: int = 3,
+    seed: int = 0,
+) -> Winner:
+    """Time every candidate at one shape; return the pinned winner.
+
+    Deterministic given a deterministic ``measure``: candidates are
+    evaluated in their stable enumeration order and ties keep the
+    earlier candidate.
+    """
+    spec = as_spec(spec) if spec is not None else MacroSpec()
+    spec = spec.replace(noisy=False)
+    if candidates is None:
+        candidates = default_candidates(variant)
+    if measure is None:
+        measure = _wall_measure(reps)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, spec.act_levels, (m, k)), jnp.int32)
+    lo = -(1 << (spec.weight_bits - 1))
+    hi = 1 << (spec.weight_bits - 1)
+    w = jnp.asarray(rng.integers(lo, hi, (k, n)), jnp.int32)
+
+    best: Winner | None = None
+    for backend, block in candidates:
+        fn = jax.jit(
+            lambda xx, ww, _b=backend, _blk=block: dispatch.dispatch(
+                xx, ww, spec, variant=variant, backend=_b, block=_blk
+            )
+        )
+        try:
+            jax.block_until_ready(fn(x, w))  # compile + feasibility
+        except Exception:  # noqa: BLE001 - infeasible candidate (depth guard...)
+            continue
+        secs = float(measure(
+            (backend, block), lambda: jax.block_until_ready(fn(x, w))
+        ))
+        if best is None or secs * 1e6 < best.us:
+            best = Winner(backend=backend, block=block, us=secs * 1e6)
+    if best is None:
+        raise RuntimeError(
+            f"no feasible kernel candidate for variant='{variant}' at "
+            f"shape ({m}, {k}, {n})"
+        )
+    return best
+
+
+def autotune(
+    shapes: Iterable[tuple[int, int, int]],
+    spec: CIMConfig | MacroSpec | None = None,
+    *,
+    variants: Sequence[str] = ("p8t", "adder-tree", "cell-adc"),
+    arch: str | None = None,
+    save: bool = True,
+    path: pathlib.Path | str | None = None,
+    activate: bool = True,
+    merge: bool = True,
+    **sweep_kw,
+) -> TuningCache:
+    """Sweep a (variants x shapes) grid and persist/activate the winners.
+
+    One entry per (variant, shape cell); when several concrete shapes
+    fall in one cell the last sweep wins (pass one representative per
+    cell). With ``save`` the cache lands at ``results/autotune/`` (or
+    ``path``); with ``activate`` it becomes the cache dispatch
+    consults in this process. ``merge`` (default) seeds the result
+    with the previously persisted entries for this arch, so a partial
+    re-sweep updates only the swept cells instead of discarding every
+    other pinned winner; pass ``merge=False`` to start clean.
+    """
+    arch = arch or jax.default_backend()
+    shapes = tuple(shapes)  # generators must survive the variant loop
+    cache = TuningCache(arch=arch)
+    if merge:
+        prev = TuningCache.load(arch=arch, path=path)
+        if prev is not None:
+            cache.entries.update(prev.entries)
+    for variant in variants:
+        for (m, k, n) in shapes:
+            cell = dispatch.shape_cell(m, k, n)
+            cache.put(
+                variant, cell,
+                sweep_shape(variant, spec, m, k, n, **sweep_kw),
+            )
+    if save:
+        cache.save(path)
+    if activate:
+        set_active(cache)
+    return cache

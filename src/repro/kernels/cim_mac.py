@@ -1,4 +1,11 @@
-"""Pallas TPU kernel for the GPQ (grouped-partial-sum quantized) matmul.
+"""Pallas TPU kernels for the GPQ (grouped-partial-sum quantized) matmul.
+
+Three variant transfers share one tiling scheme (see below): the P-8T
+per-plane flash (``gpq_matmul``), the adder-tree merged single-ADC
+conversion (``adder_tree_gpq_matmul``), and the cell-embedded SAR
+readout (``cell_adc_gpq_matmul``). ``kernels.dispatch`` routes each
+macro variant to its kernel; the notes below describe the shared
+structure through the P-8T instance.
 
 This is the perf-critical hot spot of the paper's technique mapped to
 TPU (DESIGN.md Sec. 2): the 16-row ABL charge-sharing accumulation
@@ -46,26 +53,12 @@ from repro.core.params import CIMConfig
 from repro.core.pipeline import MacroSpec
 
 
-def _gpq_kernel(
-    x_ref,
-    w_ref,
-    out_ref,
-    *,
-    rows: int,
-    weight_bits: int,
-    adc_step: float,
-    adc_codes: int,
-    nsteps_k: int,
-):
-    """One (i, j, k) grid step; accumulates into out_ref."""
-    k_step = pl.program_id(2)
+def _grouped_plane_pmac(x, w, rows: int, weight_bits: int):
+    """Shared kernel prologue: tile codes -> grouped plane partial-MACs.
 
-    @pl.when(k_step == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    x = x_ref[...]  # [bm, bk] f32
-    w = w_ref[...]  # [bk, bn] i32
+    x [bm, bk] f32 activation codes, w [bk, bn] i32 signed weight codes
+    -> pmac [gk, bm, B*bn] f32 (exact integers) plus (bm, bn, gk, b).
+    """
     bm, bk = x.shape
     bn = w.shape[1]
     gk = bk // rows
@@ -91,57 +84,138 @@ def _gpq_kernel(
         dimension_numbers=(((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32,
     )  # [gk, bm, B*bn]
+    return pmac, (bm, bn, gk, b)
 
-    # Fused ADC transfer: cutoff clip + floor quantization, then the
-    # digital shift-add with the MSB plane negative (two's complement).
-    code = jnp.clip(jnp.floor(pmac / adc_step), 0, adc_codes - 1)
+
+def _plane_signs_f32(b: int):
+    return (2.0 ** jnp.arange(b, dtype=jnp.float32)).at[b - 1].multiply(-1.0)
+
+
+def _gpq_kernel(
+    x_ref,
+    w_ref,
+    out_ref,
+    *,
+    rows: int,
+    weight_bits: int,
+    adc_step: float,
+    adc_codes: int,
+    nearest: bool = False,
+):
+    """One (i, j, k) grid step; accumulates into out_ref."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pmac, (bm, bn, gk, b) = _grouped_plane_pmac(
+        x_ref[...], w_ref[...], rows, weight_bits
+    )
+
+    # Fused ADC transfer: cutoff clip + floor (or round-to-nearest)
+    # quantization, then the digital shift-add with the MSB plane
+    # negative (two's complement).
+    half = 0.5 if nearest else 0.0
+    code = jnp.clip(jnp.floor(pmac / adc_step + half), 0, adc_codes - 1)
     deq = code.reshape(gk, bm, b, bn) * adc_step
-    signs = (2.0 ** jnp.arange(b, dtype=jnp.float32)).at[b - 1].multiply(-1.0)
-    contrib = jnp.einsum("gmbn,b->mn", deq, signs)
+    contrib = jnp.einsum("gmbn,b->mn", deq, _plane_signs_f32(b))
 
     out_ref[...] += contrib
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
-)
-def gpq_matmul(
-    x_codes: jax.Array,
-    w_codes: jax.Array,
-    cfg: CIMConfig | MacroSpec,
+def _adder_tree_kernel(
+    x_ref,
+    w_ref,
+    out_ref,
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
-    interpret: bool = True,
-) -> jax.Array:
-    """Pallas GPQ matmul. x: [M, K] codes, w: [K, N] signed codes.
+    rows: int,
+    weight_bits: int,
+    step: float,
+    code_min: int,
+    code_max: int,
+    nearest: bool,
+):
+    """Merged-transfer grid step (single-ADC adder-tree interface).
 
-    The operating point is consumed as a declarative ``MacroSpec``
-    (``CIMConfig`` inputs are normalized): the kernel reads the AMU
-    group geometry (``rows_active``) and the ADC transfer constants
-    (``adc_step``/``adc_codes``/``threshold``) from the stage specs
-    rather than raw config fields, so swept/calibrated specs lower
-    without a config round-trip.
-
-    Shapes are padded to tile multiples; K padding is benign (zero codes
-    contribute zero pMAC -> ADC code 0 -> no shift-add contribution).
+    The per-plane partial MACs of each row group fold through the
+    binary-weighted analog adder (MSB negative) into ONE signed merged
+    value per (group, output); the single SAR conversion is the fused
+    quantizer here — one code per group instead of B.
     """
-    cfg = MacroSpec.from_config(cfg)
-    m, k = x_codes.shape
-    k2, n = w_codes.shape
-    assert k == k2, (x_codes.shape, w_codes.shape)
-    rows = cfg.rows_active
-    if bk % rows != 0:
-        raise ValueError(f"bk={bk} must be a multiple of rows_active={rows}")
-    # f32 exact-integer accumulation bound (see module docstring).
-    max_abs = (k + rows - 1) // rows * (1 << (cfg.weight_bits - 1)) * cfg.threshold
-    if max_abs >= (1 << 24) * 0.5 * cfg.adc_step:
-        raise ValueError(
-            f"K={k} too deep for exact f32 accumulation at this operating "
-            "point; use core.matmul.cim_matmul_int"
-        )
+    k_step = pl.program_id(2)
 
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pmac, (bm, bn, gk, b) = _grouped_plane_pmac(
+        x_ref[...], w_ref[...], rows, weight_bits
+    )
+    # Charge-domain merge: [gk, bm, b, bn] x signs -> [gk, bm, bn].
+    merged = jnp.einsum(
+        "gmbn,b->gmn", pmac.reshape(gk, bm, b, bn), _plane_signs_f32(b)
+    )
+    half = 0.5 if nearest else 0.0
+    code = jnp.clip(
+        jnp.floor(merged / step + half), code_min, code_max
+    )
+    # Zero-padded groups merge to 0 -> code 0 -> no contribution, so K
+    # padding stays benign. Codes are exact integers; the common factor
+    # `step` is applied after the group reduction.
+    out_ref[...] += jnp.sum(code, axis=0) * step
+
+
+def _cell_adc_kernel(
+    x_ref,
+    w_ref,
+    out_ref,
+    *,
+    rows: int,
+    weight_bits: int,
+    adc_step: float,
+    adc_bits: int,
+    nearest: bool,
+):
+    """Cell-embedded-ADC grid step: SAR search vs per-row references.
+
+    The conversion is expressed exactly as the hardware does it — a
+    successive-approximation binary search of one reused comparator per
+    column against the in-array per-row reference levels (level t sits
+    at pMAC t*step) — instead of the flash model's floor division. The
+    resulting codes are bit-identical to the floor transfer (the
+    variant's integer oracle), which the dispatch parity tests assert.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pmac, (bm, bn, gk, b) = _grouped_plane_pmac(
+        x_ref[...], w_ref[...], rows, weight_bits
+    )
+    # 'nearest' shifts every decision threshold by half an LSB; 'floor'
+    # compares against the reference levels directly.
+    thresh_off = 0.5 * adc_step if nearest else 0.0
+    code = jnp.zeros(pmac.shape, dtype=jnp.int32)
+    for bit in range(adc_bits - 1, -1, -1):  # static unrolled SAR loop
+        trial = jnp.bitwise_or(code, 1 << bit)
+        take = pmac + thresh_off >= trial.astype(jnp.float32) * adc_step
+        code = jnp.where(take, trial, code)
+    deq = code.astype(jnp.float32).reshape(gk, bm, b, bn) * adc_step
+    out_ref[...] += jnp.einsum("gmbn,b->mn", deq, _plane_signs_f32(b))
+
+
+def _tiled_call(kernel, x_codes, w_codes, *, bm, bn, bk, interpret):
+    """Shared pad-to-tiles + pallas_call plumbing of the GPQ kernels.
+
+    Shapes are padded to tile multiples; K padding is benign for every
+    transfer here (zero codes -> zero pMAC/merged value -> code 0 -> no
+    shift-add contribution).
+    """
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
     mp = -(-m // bm) * bm
     np_ = -(-n // bn) * bn
     kp = -(-k // bk) * bk
@@ -149,15 +223,6 @@ def gpq_matmul(
     w_p = jnp.pad(w_codes.astype(jnp.int32), ((0, kp - k), (0, np_ - n)))
 
     grid = (mp // bm, np_ // bn, kp // bk)
-    kernel = functools.partial(
-        _gpq_kernel,
-        rows=rows,
-        weight_bits=cfg.weight_bits,
-        adc_step=float(cfg.adc_step),
-        adc_codes=cfg.adc_codes,
-        nsteps_k=grid[2],
-    )
-
     kwargs = {}
     if not interpret:
         # TPU compiler hints: m/n parallel, k sequential (accumulation).
@@ -183,3 +248,158 @@ def gpq_matmul(
         **kwargs,
     )(x_p, w_p)
     return out[:m, :n]
+
+
+def _check_blocking(bk: int, rows: int) -> None:
+    if bk % rows != 0:
+        raise ValueError(f"bk={bk} must be a multiple of rows_active={rows}")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def gpq_matmul(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig | MacroSpec,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas GPQ matmul. x: [M, K] codes, w: [K, N] signed codes.
+
+    The operating point is consumed as a declarative ``MacroSpec``
+    (``CIMConfig`` inputs are normalized): the kernel reads the AMU
+    group geometry (``rows_active``) and the ADC transfer constants
+    (``adc_step``/``adc_codes``/``threshold``) from the stage specs
+    rather than raw config fields, so swept/calibrated specs lower
+    without a config round-trip.
+    """
+    cfg = MacroSpec.from_config(cfg)
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, (x_codes.shape, w_codes.shape)
+    rows = cfg.rows_active
+    _check_blocking(bk, rows)
+    # f32 exact-integer accumulation bound (see module docstring).
+    max_abs = (k + rows - 1) // rows * (1 << (cfg.weight_bits - 1)) * cfg.threshold
+    if max_abs >= (1 << 24) * 0.5 * cfg.adc_step:
+        raise ValueError(
+            f"K={k} too deep for exact f32 accumulation at this operating "
+            "point; use core.matmul.cim_matmul_int"
+        )
+
+    kernel = functools.partial(
+        _gpq_kernel,
+        rows=rows,
+        weight_bits=cfg.weight_bits,
+        adc_step=float(cfg.adc_step),
+        adc_codes=cfg.adc_codes,
+        nearest=cfg.adc_mode == "nearest",
+    )
+    return _tiled_call(
+        kernel, x_codes, w_codes, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def adder_tree_gpq_matmul(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig | MacroSpec,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas kernel for the adder-tree merged transfer (arXiv:2212.04320).
+
+    Per row group the B plane partial-MACs fold through the binary-
+    weighted charge-domain adder into one signed merged value, and ONE
+    conversion (``bits_eff`` SAR decisions) produces the group's code —
+    the single-ADC interface of ``variants.adder_tree_matmul_int``,
+    fused onto the contraction tile. Noiseless by design (production
+    inference path); bit-exact vs the integer transfer (dispatch parity
+    tests).
+    """
+    from repro.core.variants import merged_quant  # noqa: PLC0415 - no cycle
+
+    cfg = MacroSpec.from_config(cfg)
+    m, k = x_codes.shape
+    assert k == w_codes.shape[0], (x_codes.shape, w_codes.shape)
+    rows = cfg.rows_active
+    _check_blocking(bk, rows)
+    mq = merged_quant(cfg)
+    # f32 exactness: group codes are integers in [code_min, code_max];
+    # the accumulated code sum must stay exactly representable.
+    g = (k + rows - 1) // rows
+    if g * max(abs(mq.code_min), mq.code_max) >= (1 << 24):
+        raise ValueError(
+            f"K={k} too deep for exact f32 accumulation of merged codes; "
+            "use variants.adder_tree_matmul_int"
+        )
+
+    kernel = functools.partial(
+        _adder_tree_kernel,
+        rows=rows,
+        weight_bits=cfg.weight_bits,
+        step=float(mq.step),
+        code_min=mq.code_min,
+        code_max=mq.code_max,
+        nearest=cfg.adc_mode == "nearest",
+    )
+    return _tiled_call(
+        kernel, x_codes, w_codes, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def cell_adc_gpq_matmul(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig | MacroSpec,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas kernel for the cell-embedded ADC readout (arXiv:2307.05944).
+
+    Same grouping as :func:`gpq_matmul`, but the conversion is the
+    in-array SAR search of one reused comparator per column against the
+    per-row cell-generated reference levels — ``adc_bits`` unrolled
+    compare/keep decisions instead of a floor division. Noise-free
+    codes are bit-identical to the P-8T floor transfer (the variant's
+    ideal transfer; asserted in the dispatch parity tests).
+    """
+    cfg = MacroSpec.from_config(cfg)
+    m, k = x_codes.shape
+    assert k == w_codes.shape[0], (x_codes.shape, w_codes.shape)
+    rows = cfg.rows_active
+    _check_blocking(bk, rows)
+    max_abs = (k + rows - 1) // rows * (1 << (cfg.weight_bits - 1)) * cfg.threshold
+    if max_abs >= (1 << 24) * 0.5 * cfg.adc_step:
+        raise ValueError(
+            f"K={k} too deep for exact f32 accumulation at this operating "
+            "point; use core.matmul.cim_matmul_int"
+        )
+
+    kernel = functools.partial(
+        _cell_adc_kernel,
+        rows=rows,
+        weight_bits=cfg.weight_bits,
+        adc_step=float(cfg.adc_step),
+        adc_bits=cfg.adc_bits,
+        nearest=cfg.adc_mode == "nearest",
+    )
+    return _tiled_call(
+        kernel, x_codes, w_codes, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )

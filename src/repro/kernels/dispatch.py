@@ -1,0 +1,435 @@
+"""Unified variant-aware kernel dispatch: one table for every macro matmul.
+
+Before this module, executing a macro variant took three parallel
+edits: a tuned backend in ``kernels/ops.py``, a string key in
+``core/engine.py``'s backend registry, and a per-variant ``matmul_int``
+wired into ``core/variants.py`` / ``core/calibrate.py``. The dispatch
+table collapses them into one subsystem: a
+
+    KernelKey(variant, backend, shape_cell, dtype) -> implementation
+
+map that ``engine.execute`` (the behavioral/pallas built-ins), the
+calibrated "analog" backend and ``ServeEngine`` all route through.
+Adding a macro variant or a device kernel is ONE ``register_kernel``
+call (and any variant registered in ``core.variants`` gets its scan
+transfer auto-wired — zero calls).
+
+Built-in backends per variant:
+
+  "scan"    the jnp ``lax.scan`` transfer (one group per step). The
+            only backend that injects hardware noise; peak memory is
+            one group tile, so it is the large-shape default.
+  "ref"     the vectorized formulation (kernels.ref): a single fused
+            einsum pair. Wins at decode shapes (small M) on CPU/GPU —
+            the per-shape choice the autotuner discovers.
+  "pallas"  the fused Pallas kernel (kernels.cim_mac); native lowering
+            on TPU, interpret mode elsewhere. Noiseless by design
+            (production inference path).
+
+Resolution order when no backend is requested explicitly:
+
+  1. hardware-noise injection (``spec.noisy`` and a key) semantically
+     requires the scan transfer — recorded as source="noise";
+  2. the autotune cache (``kernels.autotune``): the pinned winner for
+     (arch, variant, shape cell), including its block sizes;
+  3. heuristics: the variant's Pallas kernel on TPU, else the scan.
+
+An explicit ``backend=`` request is always honored (no silent
+fallback — ``record_resolutions`` lets callers and the check.sh guard
+assert exactly which implementation ran); an unknown key raises.
+
+An implementation is ``fn(x_codes, w_codes, spec, *, key=None,
+planes=None, block=None) -> [M, N] float32`` in integer-domain macro
+units — the ``matmul.cim_matmul_int`` contract. ``planes`` carries a
+plan's pre-grouped bit planes (ignored by kernels that re-slice the
+resident codes in-tile), ``block`` a (bm, bn, bk) Pallas tiling.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import jax
+
+from repro.core import matmul as matmul_lib
+from repro.core import variants as variants_lib
+from repro.core.params import CIMConfig
+from repro.core.pipeline import MacroSpec, as_spec
+from repro.kernels import ref as ref_lib
+
+# fn(x_codes, w_codes, spec, *, key, planes, block) -> [M, N] f32
+KernelFn = Callable[..., jax.Array]
+
+# Backend preference order (used by autotune candidate enumeration).
+KNOWN_BACKENDS = ("scan", "ref", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKey:
+    """Registration/lookup key of one kernel implementation.
+
+    ``shape_cell``/``dtype`` of None are wildcards (match any); a
+    non-None cell or dtype registers a shape- or dtype-specialized
+    kernel that wins over the generic one (most-specific-first lookup).
+    """
+
+    variant: str
+    backend: str
+    shape_cell: tuple[int, int, int] | None = None
+    dtype: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """A registered implementation plus its capability flags."""
+
+    fn: KernelFn
+    supports_noise: bool = False
+    supports_planes: bool = False
+    is_pallas: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """One dispatch decision (recorded at trace time under jit)."""
+
+    key: KernelKey
+    source: str  # "explicit" | "noise" | "tuned" | "heuristic"
+    block: tuple[int, int, int] | None = None
+
+
+_TABLE: dict[KernelKey, KernelImpl] = {}
+_LISTENERS: list[Callable[[Resolution], None]] = []
+
+
+def register_kernel(
+    key: KernelKey,
+    fn: KernelFn,
+    *,
+    supports_noise: bool = False,
+    supports_planes: bool = False,
+    is_pallas: bool = False,
+    overwrite: bool = False,
+) -> KernelKey:
+    """Register one implementation under a KernelKey. Returns the key."""
+    if key in _TABLE and not overwrite:
+        raise ValueError(
+            f"kernel {key} already registered (overwrite=True to replace)"
+        )
+    _TABLE[key] = KernelImpl(
+        fn=fn,
+        supports_noise=supports_noise,
+        supports_planes=supports_planes,
+        is_pallas=is_pallas,
+    )
+    return key
+
+
+def kernel_keys() -> tuple[KernelKey, ...]:
+    """Every registered key, deterministically ordered."""
+    return tuple(sorted(
+        _TABLE,
+        key=lambda k: (k.variant, k.backend, k.shape_cell or (),
+                       k.dtype or ""),
+    ))
+
+
+def backends_for(variant: str) -> tuple[str, ...]:
+    """Registered backends of one variant, in preference order."""
+    got = {k.backend for k in _TABLE if k.variant == variant}
+    if variant in variants_lib.names():
+        got.add("scan")  # auto-wired from the MacroVariant registry
+    ordered = [b for b in KNOWN_BACKENDS if b in got]
+    return tuple(ordered + sorted(got - set(KNOWN_BACKENDS)))
+
+
+def has_pallas(variant: str) -> bool:
+    return any(
+        k.variant == variant and _TABLE[k].is_pallas for k in _TABLE
+    )
+
+
+_CELL_CAP = 8192
+
+
+def shape_cell(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Bucket a concrete (M, K, N) into its tuning cell.
+
+    Each dim rounds up to the next power of two (capped at 8192): the
+    autotuner sweeps one representative per cell and the pinned winner
+    serves every shape in it — decode steps with 1..8 in-flight tokens
+    all land in the m=8 cell, for example.
+    """
+
+    def cell(d: int) -> int:
+        p = 1
+        while p < d and p < _CELL_CAP:
+            p *= 2
+        return p
+
+    return (cell(m), cell(k), cell(n))
+
+
+def lookup(
+    variant: str,
+    backend: str,
+    shape_cell: tuple[int, int, int] | None = None,
+    dtype: str | None = None,
+) -> KernelImpl | None:
+    """Most-specific-first table lookup; auto-wires variant scans.
+
+    A "scan" miss for a variant present in the ``core.variants``
+    registry is satisfied from ``MacroVariant.matmul_int``, so
+    registering a variant is enough to execute it — the dispatch half
+    of "one registration instead of three edits". (The auto-wired impl
+    is built per lookup, NOT written into the table: a later explicit
+    ``register_kernel(KernelKey(v, "scan"), ...)`` must succeed
+    regardless of whether a dispatch ran first.)
+    """
+    for key in (
+        KernelKey(variant, backend, shape_cell, dtype),
+        KernelKey(variant, backend, shape_cell, None),
+        KernelKey(variant, backend, None, dtype),
+        KernelKey(variant, backend, None, None),
+    ):
+        impl = _TABLE.get(key)
+        if impl is not None:
+            return impl
+    if backend == "scan" and variant in variants_lib.names():
+        var = variants_lib.get(variant)
+
+        def run(x_codes, w_codes, spec, *, key=None, planes=None,
+                block=None, _fn=var.matmul_int):
+            del block
+            return _fn(x_codes, w_codes, spec, key=key, planes=planes)
+
+        return KernelImpl(
+            fn=run, supports_noise=True, supports_planes=True
+        )
+    return None
+
+
+@contextlib.contextmanager
+def record_resolutions() -> Iterator[list[Resolution]]:
+    """Capture every dispatch decision made inside the context.
+
+    Under jit the decision happens at trace time, so a cached
+    compilation records nothing — wrap the first (tracing) call. Used
+    by the no-silent-fallback guard in benchmarks/kernel_bench.py and
+    the routing tests.
+    """
+    log: list[Resolution] = []
+    _LISTENERS.append(log.append)
+    try:
+        yield log
+    finally:
+        _LISTENERS.remove(log.append)
+
+
+def _notify(res: Resolution) -> None:
+    for cb in _LISTENERS:
+        cb(res)
+
+
+def _heuristic_backend(variant: str, planes) -> str:
+    # A plan's pre-grouped planes are a weight-stationary optimization
+    # the Pallas kernels don't consume (they re-slice resident codes
+    # in-tile) — implicit routing keeps the plan semantics and takes
+    # the scan; the autotune cache can still deliberately pin pallas.
+    if (
+        planes is None
+        and jax.default_backend() == "tpu"
+        and has_pallas(variant)
+    ):
+        return "pallas"
+    return "scan"
+
+
+def dispatch(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    spec: CIMConfig | MacroSpec,
+    *,
+    variant: str = "p8t",
+    backend: str | None = None,
+    key: jax.Array | None = None,
+    planes: jax.Array | None = None,
+    block: tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """Route one integer-domain macro matmul to its implementation.
+
+    Args:
+      x_codes: [M, K] activation codes; w_codes: [K, N] signed weight
+        codes (a plan's ``codes_i32``).
+      spec: the operating point (variant transfer constants).
+      variant: macro family name (``core.variants`` registry).
+      backend: explicit implementation choice; None = tuned/heuristic.
+      key: PRNG key for hardware-noise injection — routes to the scan
+        transfer unless the backend was requested explicitly (the
+        Pallas/ref formulations are noiseless by design and ignore it).
+      planes: plan-grouped bit planes, forwarded to implementations
+        that consume them (scan/ref); kernels re-slice the resident
+        codes in-tile and ignore them.
+      block: (bm, bn, bk) Pallas tiling override; defaults to the
+        tuned winner's blocks, else (128, 128, 128).
+    """
+    spec = as_spec(spec)
+    m, k = x_codes.shape
+    n = w_codes.shape[-1]
+    cell = shape_cell(m, k, n)
+    dtype = w_codes.dtype.name
+    noisy = bool(spec.noisy) and key is not None
+
+    source = "explicit"
+    if backend is None:
+        if noisy:
+            backend, source = "scan", "noise"
+        else:
+            from repro.kernels import autotune  # noqa: PLC0415 - cycle-free lazy
+
+            win = autotune.lookup(variant, cell)
+            if win is not None:
+                backend, source = win.backend, "tuned"
+                if block is None:
+                    block = win.block
+            else:
+                backend = _heuristic_backend(variant, planes)
+                source = "heuristic"
+
+    impl = lookup(variant, backend, cell, dtype)
+    if impl is None:
+        raise KeyError(
+            f"no kernel registered for variant='{variant}' "
+            f"backend='{backend}' (cell={cell}, dtype={dtype}); "
+            f"registered backends for this variant: "
+            f"{backends_for(variant)}"
+        )
+    _notify(Resolution(
+        key=KernelKey(variant, backend, cell, dtype),
+        source=source,
+        block=block if impl.is_pallas else None,
+    ))
+
+    def run(chosen: KernelImpl, blk):
+        return chosen.fn(
+            x_codes,
+            w_codes,
+            spec,
+            key=key if chosen.supports_noise else None,
+            planes=planes if chosen.supports_planes else None,
+            block=blk,
+        )
+
+    if source == "explicit" or backend == "scan":
+        return run(impl, block)
+    try:
+        return run(impl, block)
+    except ValueError:
+        # Implicitly-chosen impl infeasible at this shape/operating
+        # point (e.g. the Pallas f32 depth guard, a stale tuned pin):
+        # fall back to the always-feasible scan transfer and RECORD it
+        # — explicit requests above still raise loudly, which is what
+        # the no-silent-fallback guard asserts.
+        scan = lookup(variant, "scan", cell, dtype)
+        if scan is None:  # kernel-only custom variant: nothing to fall to
+            raise
+        _notify(Resolution(
+            key=KernelKey(variant, "scan", cell, dtype),
+            source="guard-fallback",
+        ))
+        return run(scan, None)
+
+
+# ---------------------------------------------------------------------------
+# Built-in implementations
+# ---------------------------------------------------------------------------
+
+
+def _scan_impl(module, attr: str) -> KernelFn:
+    # Late-bound module attribute (not the function object): test spies
+    # and user monkeypatches of e.g. matmul.cim_matmul_int must be seen
+    # by dispatched executions too.
+    def run(x_codes, w_codes, spec, *, key=None, planes=None, block=None):
+        del block
+        return getattr(module, attr)(
+            x_codes, w_codes, spec, key=key, planes=planes
+        )
+
+    return run
+
+
+def _ref_impl(module, attr: str) -> KernelFn:
+    def run(x_codes, w_codes, spec, *, key=None, planes=None, block=None):
+        del key, block  # noiseless vectorized formulation
+        return getattr(module, attr)(x_codes, w_codes, spec, planes=planes)
+
+    return run
+
+
+def _pallas_blocks(
+    spec: MacroSpec, block: tuple[int, int, int] | None
+) -> tuple[int, int, int]:
+    bm, bn, bk = block or (128, 128, 128)
+    rows = spec.rows_active
+    bk = max(rows, bk - bk % rows)  # kernel needs rows | bk
+    return bm, bn, bk
+
+
+def _pallas_impl(kernel_name: str) -> KernelFn:
+    def run(x_codes, w_codes, spec, *, key=None, planes=None, block=None):
+        del key, planes  # noiseless by design; codes stay resident
+        from repro.kernels import ops  # noqa: PLC0415 - optional pallas dep
+
+        bm, bn, bk = _pallas_blocks(spec, block)
+        fn = getattr(ops, kernel_name)
+        return fn(x_codes, w_codes, spec, bm=bm, bn=bn, bk=bk)
+
+    return run
+
+
+register_kernel(
+    KernelKey("p8t", "scan"), _scan_impl(matmul_lib, "cim_matmul_int"),
+    supports_noise=True, supports_planes=True,
+)
+register_kernel(
+    KernelKey("p8t", "ref"), _ref_impl(ref_lib, "cim_matmul_ref"),
+    supports_planes=True,
+)
+register_kernel(
+    KernelKey("p8t", "pallas"), _pallas_impl("cim_matmul_kernel"),
+    is_pallas=True,
+)
+
+# cell-adc: the ideal transfer equals the P-8T floor transfer, so scan
+# and ref reuse those formulations; the Pallas kernel is the distinct
+# per-row-reference SAR search (bit-identical codes).
+register_kernel(
+    KernelKey("cell-adc", "scan"), _scan_impl(matmul_lib, "cim_matmul_int"),
+    supports_noise=True, supports_planes=True,
+)
+register_kernel(
+    KernelKey("cell-adc", "ref"), _ref_impl(ref_lib, "cim_matmul_ref"),
+    supports_planes=True,
+)
+register_kernel(
+    KernelKey("cell-adc", "pallas"), _pallas_impl("cell_adc_matmul_kernel"),
+    is_pallas=True,
+)
+
+register_kernel(
+    KernelKey("adder-tree", "scan"),
+    _scan_impl(variants_lib, "adder_tree_matmul_int"),
+    supports_noise=True, supports_planes=True,
+)
+register_kernel(
+    KernelKey("adder-tree", "ref"),
+    _ref_impl(ref_lib, "adder_tree_matmul_ref"),
+    supports_planes=True,
+)
+register_kernel(
+    KernelKey("adder-tree", "pallas"),
+    _pallas_impl("adder_tree_matmul_kernel"),
+    is_pallas=True,
+)

@@ -2,14 +2,21 @@
 
 Independent of core/matmul.py's scan formulation on purpose: this is the
 vectorized "textbook" statement of the macro semantics used to
-cross-validate both the behavioral model and the Pallas kernel.
+cross-validate both the behavioral model and the Pallas kernels.
 
   pmac[m, g, b, n] = sum_{k in group g} x[m, k] * bit_b(w[k, n])
   code             = clip(floor(pmac / step), 0, 2**adc_bits - 1)
   y[m, n]          = sum_{g, b} sign_b * step * code
 
-Noiseless by definition (the kernel is the production path; hardware-
+Noiseless by definition (the kernels are the production path; hardware-
 error Monte-Carlo runs through core.matmul.cim_matmul_int).
+
+Beyond oracle duty these formulations are also the dispatch table's
+"ref" backend: at decode shapes (small M) the single fused einsum pair
+beats the scan's G sequential group steps on CPU/GPU, which is exactly
+the per-shape choice ``kernels.autotune`` discovers and pins. For that
+role they accept a plan's pre-grouped ``planes`` (both storage forms)
+so the weight side stays stationary.
 """
 
 from __future__ import annotations
@@ -21,28 +28,73 @@ from repro.core.params import CIMConfig
 from repro.core.quant import bitslice_weights, plane_signs
 
 
-def cim_matmul_ref(
-    x_codes: jax.Array, w_codes: jax.Array, cfg: CIMConfig
-) -> jax.Array:
-    """[M, K] x [K, N] -> [M, N] float32, macro semantics, vectorized."""
+def _grouped_operands(x_codes, w_codes, cfg, planes):
+    """Normalize (w_codes | plan planes) -> xg [M,G,rows], wp [B,G,rows,N]."""
     m, k = x_codes.shape
-    k2, n = w_codes.shape
-    assert k == k2
     rows = cfg.rows_active
     b = cfg.weight_bits
     k_pad = -(-k // rows) * rows
-
-    x = jnp.pad(x_codes.astype(jnp.float32), ((0, 0), (0, k_pad - k)))
-    w = jnp.pad(w_codes.astype(jnp.int32), ((0, k_pad - k), (0, 0)))
     g = k_pad // rows
-
-    planes = bitslice_weights(w, b).astype(jnp.float32)  # [B, Kp, N]
-    planes = planes.reshape(b, g, rows, n)
+    x = jnp.pad(x_codes.astype(jnp.float32), ((0, 0), (0, k_pad - k)))
     xg = x.reshape(m, g, rows)
+    if planes is None:
+        n = w_codes.shape[1]
+        w = jnp.pad(w_codes.astype(jnp.int32), ((0, k_pad - k), (0, 0)))
+        wp = bitslice_weights(w, b).reshape(b, g, rows, n)
+    elif planes.ndim == 3:  # packed plan planes: [G, rows, N] uint8
+        wp = bitslice_weights(planes, b)  # [B, G, rows, N]
+    else:  # unpacked plan planes: [G, B, rows, N]
+        wp = planes.transpose(1, 0, 2, 3)
+    return xg, wp.astype(jnp.float32)
 
-    pmac = jnp.einsum("mgr,bgrn->mgbn", xg, planes)
+
+def cim_matmul_ref(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    planes: jax.Array | None = None,
+) -> jax.Array:
+    """[M, K] x [K, N] -> [M, N] float32, macro semantics, vectorized.
+
+    ``planes`` optionally reuses a plan's pre-grouped bit planes
+    (``engine.plan_weights`` layouts, grouped at ``cfg.rows_active``)
+    instead of re-slicing ``w_codes``.
+    """
+    xg, wp = _grouped_operands(x_codes, w_codes, cfg, planes)
+    pmac = jnp.einsum("mgr,bgrn->mgbn", xg, wp)
+    half = 0.5 if getattr(cfg, "adc_mode", "floor") == "nearest" else 0.0
     code = jnp.clip(
-        jnp.floor(pmac / cfg.adc_step), 0, cfg.adc_codes - 1
+        jnp.floor(pmac / cfg.adc_step + half), 0, cfg.adc_codes - 1
     )
-    signs = plane_signs(b).astype(jnp.float32)
+    signs = plane_signs(cfg.weight_bits).astype(jnp.float32)
     return jnp.einsum("mgbn,b->mn", code * cfg.adc_step, signs)
+
+
+def adder_tree_matmul_ref(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    cfg: CIMConfig,
+    *,
+    planes: jax.Array | None = None,
+) -> jax.Array:
+    """Vectorized single-ADC merged transfer (adder-tree interface).
+
+    The textbook statement of ``variants.adder_tree_matmul_int``: merge
+    the plane partial-MACs in the charge domain (MSB negative), ONE
+    conversion per (group, output), sum the dequantized group codes.
+    Noiseless; bit-exact vs the scan transfer (dispatch parity tests).
+    """
+    from repro.core.variants import merged_quant  # noqa: PLC0415 - no cycle
+
+    spec = cfg
+    xg, wp = _grouped_operands(x_codes, w_codes, cfg, planes)
+    signs = plane_signs(cfg.weight_bits).astype(jnp.float32)
+    pmac = jnp.einsum("mgr,bgrn->mgbn", xg, wp)
+    merged = jnp.einsum("mgbn,b->mgn", pmac, signs)
+    mq = merged_quant(spec)
+    half = 0.5 if getattr(spec, "adc_mode", "floor") == "nearest" else 0.0
+    code = jnp.clip(
+        jnp.floor(merged / mq.step + half), mq.code_min, mq.code_max
+    )
+    return jnp.sum(code, axis=1) * mq.step

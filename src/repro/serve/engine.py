@@ -20,6 +20,24 @@ Planned trees persist through ``checkpoint.store`` (PlannedWeights is a
 registered dataclass, so its leaves checkpoint under attribute paths):
 ``ServeEngine.restore_planned`` warm-starts a server from such a
 checkpoint without re-quantizing / re-bit-slicing any weight.
+
+Plan-aware scaling:
+
+* **Donated plan buffers** (``donate_plan=True``, opt-in) — the jitted
+  decode step takes the params as a donated argument and returns them
+  unchanged, so XLA aliases the plan buffers input->output and may
+  reuse their memory across the step. Donation deletes the caller's
+  input arrays, so the engine first takes a one-time private copy of
+  the tree — a deliberate trade (transient 2x at construction; the
+  caller's tree stays valid) that only pays off on backends/steps
+  where XLA exploits the aliasing; leave it off (the default) on
+  memory-bound single-host CPU serving, where non-donated jit inputs
+  are already zero-copy.
+* **Sharded planes** — ``mesh=`` places the planned tree under
+  ``distributed.sharding.shard_planned``: every stored-weight tensor
+  (codes, epilogue vectors, packed/unpacked ``planes``) is tensor-
+  parallel over the model axis on its output-channel dim, so planned
+  decode scales across devices without re-planning.
 """
 
 from __future__ import annotations
@@ -38,13 +56,31 @@ from repro.models import transformer
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int,
-                 batch: int, plan: bool = False):
+                 batch: int, plan: bool = False, donate_plan: bool = False,
+                 mesh=None, calibration=None):
         if plan:
-            params = cim_engine.plan_params(params, policy=cfg.cim)
+            params = cim_engine.plan_params(
+                params, policy=cfg.cim, calibration=calibration
+            )
+        if donate_plan:
+            # Donation hands the param buffers to XLA every step, which
+            # deletes the input arrays; callers routinely share one
+            # params tree across engines (or keep using it), so the
+            # engine takes a one-time private copy it then owns
+            # exclusively (see the module docstring for the trade).
+            params = jax.tree.map(
+                lambda x: jnp.array(x, copy=True), params
+            )
+        if mesh is not None:
+            from repro.distributed import sharding  # lazy: optional at serve
+
+            params = sharding.shard_planned(params, mesh)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.batch = batch
+        self.mesh = mesh
+        self._donate_plan = donate_plan
         self.caches = transformer.init_caches(
             cfg, batch, max_len,
             dtype=jnp.dtype(cfg.activation_dtype),
@@ -52,12 +88,36 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, t, c: transformer.prefill(p, t, c, cfg)
         )
-        self._decode = jax.jit(
-            lambda p, tok, pos, c: transformer.decode_step(
-                p, tok, pos, c, cfg
-            ),
-            donate_argnums=(3,),
-        )
+        if donate_plan:
+            # The decode step returns the (unchanged) params so XLA
+            # aliases the donated plan buffers input->output; the
+            # caches stay donated as before. self.params MUST be
+            # rebound from the step's third output (_decode_step).
+            self._decode = jax.jit(
+                lambda p, tok, pos, c: transformer.decode_step(
+                    p, tok, pos, c, cfg
+                ) + (p,),
+                donate_argnums=(0, 3),
+            )
+        else:
+            self._decode = jax.jit(
+                lambda p, tok, pos, c: transformer.decode_step(
+                    p, tok, pos, c, cfg
+                ),
+                donate_argnums=(3,),
+            )
+
+    def _decode_step(self, tok, pos):
+        """One decode step, rebinding the donated plan buffers."""
+        if self._donate_plan:
+            logits, self.caches, self.params = self._decode(
+                self.params, tok, pos, self.caches
+            )
+        else:
+            logits, self.caches = self._decode(
+                self.params, tok, pos, self.caches
+            )
+        return logits
 
     @classmethod
     def restore_planned(
@@ -97,8 +157,7 @@ class ServeEngine:
         out = [tok]
         for i in range(n_tokens - 1):
             pos = jnp.asarray(s + i, dtype=jnp.int32)
-            logits, self.caches = self._decode(self.params, tok, pos,
-                                               self.caches)
+            logits = self._decode_step(tok, pos)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(tok)
         return np.stack([np.asarray(t) for t in out], axis=1)
@@ -154,11 +213,8 @@ class ContinuousBatcher:
         b = self.engine.batch
         toks = np.zeros((b,), dtype=np.int32)
         toks[slot] = token
-        logits, self.engine.caches = self.engine._decode(
-            self.engine.params,
-            jnp.asarray(toks),
-            jnp.asarray(pos, dtype=jnp.int32),
-            self.engine.caches,
+        logits = self.engine._decode_step(
+            jnp.asarray(toks), jnp.asarray(pos, dtype=jnp.int32)
         )
         return int(np.asarray(jnp.argmax(logits[slot])))
 

@@ -224,3 +224,72 @@ def test_cim_error_bounded_by_quant_grid(seed):
                  + 0.5 * sw * float(jnp.max(jnp.abs(x)))
                  + 0.25 * sx * sw) + 1e-4
     assert np.max(np.abs(y - y_fp)) <= bound
+
+
+# ---------------------------------------------------------------------------
+# PR 4: variant-aware kernel dispatch + autotune cache properties
+# ---------------------------------------------------------------------------
+
+from repro.kernels import autotune, dispatch  # noqa: E402
+
+
+@given(
+    variant=st.sampled_from(("p8t", "adder-tree", "cell-adc")),
+    rows=st.sampled_from([8, 16]),
+    m=st.integers(1, 10),
+    k=st.integers(1, 80),
+    n=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_every_registered_kernel_key_matches_oracle(
+    variant, rows, m, k, n, seed
+):
+    """Pallas (interpret) / ref / scan parity for every registered
+    KernelKey of every variant, across ragged shapes and row counts."""
+    cfg = CIMConfig(rows_active=rows, cutoff=0.5, adc_bits=4)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 16, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    if variant == "adder-tree":
+        want = variants_lib.adder_tree_matmul_int(x, w, cfg)
+    else:
+        want = matmul.cim_matmul_int(x, w, cfg)
+    for backend in dispatch.backends_for(variant):
+        got = dispatch.dispatch(x, w, cfg, variant=variant,
+                                backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"{variant}/{backend}",
+        )
+
+
+@given(
+    t_scan=st.floats(0.1, 10.0),
+    t_ref=st.floats(0.1, 10.0),
+    m=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_tuning_cache_round_trip_determinism(t_scan, t_ref, m, seed):
+    """Same sweep -> same pinned winners, and the JSON cache round-trips
+    losslessly (the deterministic re-load path dispatch consults)."""
+    del seed  # shapes/measure fully determine the sweep
+    times = {"scan": t_scan, "ref": t_ref, "pallas": 99.0}
+
+    def measure(cand, run):
+        run()
+        return times[cand[0]]
+
+    kw = dict(
+        variants=("p8t", "adder-tree"), measure=measure,
+        save=False, activate=False, merge=False,
+    )
+    c1 = autotune.autotune([(m, 64, 8)], PAPER_OP_16ROWS, **kw)
+    c2 = autotune.autotune([(m, 64, 8)], PAPER_OP_16ROWS, **kw)
+    assert c1.to_json() == c2.to_json()
+    rt = autotune.TuningCache.from_json(c1.to_json())
+    assert rt.to_json() == c1.to_json()
+    best = min(times, key=times.get)
+    for win in c1.entries.values():
+        assert win.backend == best

@@ -114,3 +114,29 @@ def test_continuous_batcher_completes_requests():
     assert all(len(r.generated) == 3 for r in done)
     # 5 requests through 2 slots: continuous refill actually happened
     assert all(r.done for r in done)
+
+
+def test_donated_and_sharded_plan_decode_parity():
+    """Plan-aware serving invariants in one pass (engines are the
+    expensive part — share them): plan-buffer donation must not change
+    the token stream and must leave the caller's params intact (the
+    engine owns a private copy); mesh= must shard the planned tree
+    (planes over the model axis) and decode the same tokens."""
+    from jax.sharding import Mesh
+
+    cfg = get_config("qwen2_0_5b", smoke=True)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    don = ServeEngine(params, cfg, max_len=64, batch=2, plan=True,
+                      donate_plan=True)
+    ref = ServeEngine(params, cfg, max_len=64, batch=2, plan=True)
+    sharded = ServeEngine(params, cfg, max_len=64, batch=2, plan=True,
+                          mesh=mesh)
+    out = don.generate(prompts, 6)
+    np.testing.assert_array_equal(out, ref.generate(prompts, 6))
+    np.testing.assert_array_equal(out, sharded.generate(prompts, 6))
+    # the caller's tree survived the donations (engines copied it)
+    jax.tree.map(lambda x: np.asarray(x).sum(), params)

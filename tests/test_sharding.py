@@ -150,3 +150,52 @@ class TestInferenceRules:
                             (16, 8192, 24576), MESH1,
                             shd.INFERENCE_RULES)
         assert spec == P("data", None, "model")
+
+
+class TestPlannedShardings:
+    """Plan-aware serving: PlannedWeights leaves shard their
+    output-channel dim over the model axis (packed AND unpacked
+    planes); everything else replicates. Runs on the single CPU device
+    via a (1, 1) mesh carrying the production axis names."""
+
+    def _mesh(self):
+        import numpy as np
+        return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+
+    def test_plan_leaf_specs(self):
+        from repro.core import engine as cim
+        mesh = self._mesh()
+        w = jnp.ones((64, 32), jnp.float32)
+        for pack in (False, True):
+            plan = cim.plan_weights(w, with_planes=True,
+                                    pack_planes=pack)
+            sh = shd.plan_shardings(plan, mesh)
+            assert sh.codes.spec == P(None, "model")
+            assert sh.scale.spec == P(None, "model")
+            assert sh.colsum.spec == P(None, "model")
+            assert sh.w.spec == P(None, "model")
+            lead = (None,) * (plan.planes.ndim - 1)
+            assert sh.planes.spec == P(*lead, "model")
+
+    def test_tree_shardings_and_device_put(self):
+        from repro.core import engine as cim
+        mesh = self._mesh()
+        tree = {
+            "blk": {"w": jnp.ones((32, 16)), "bias": jnp.ones((16,))},
+        }
+        planned = cim.plan_params(tree, policy=None)
+        sh = shd.planned_param_shardings(planned, mesh)
+        assert sh["blk"]["w"].codes.spec == P(None, "model")
+        assert sh["blk"]["bias"].spec == P()  # unplanned: replicated
+        placed = shd.shard_planned(planned, mesh)
+        got = placed["blk"]["w"].dequantized()
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(planned["blk"]["w"]
+                                              .dequantized()))
+
+    def test_no_mesh_is_noop(self):
+        from repro.core import engine as cim
+        planned = cim.plan_params({"w": jnp.ones((8, 4))}, policy=None)
+        assert shd.planned_param_shardings(planned, None) is None
+        assert shd.shard_planned(planned, None) is planned
