@@ -1,0 +1,217 @@
+"""Accuracy-vs-TOPS/W pareto report per model (variants x vdd).
+
+The paper picks its operating point by hardware-aware system
+simulation against end DNN accuracy; the variant cost anchors
+(single-ADC adder tree, arXiv:2212.04320; cell-embedded ADC,
+arXiv:2307.05944) only become actionable once accuracy and TOPS/W
+live on the same sweep axis. This benchmark sweeps every macro
+variant across the supply-voltage axis, measures (or stubs, in
+smoke mode) held-out top-1 accuracy per combination, and writes the
+frontier under ``results/pareto/<model>.json`` plus a markdown
+table — byte-deterministic across re-runs with the same keys (sorted
+keys, rounded floats, no timestamps).
+
+  PYTHONPATH=src:. python benchmarks/pareto.py [--smoke|--full] [--out DIR]
+
+``--smoke`` (what scripts/check.sh runs): a tiny 2-layer synthetic
+model on a tiny grid with a stub eval derived from the fidelity
+proxy — exercises the sweep axes, the energy cost model, a short
+greedy refinement and the report writer at CI scale, no training.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibrate as cal
+from repro.core.calibrate import CalibrationGrid
+from repro.core.pipeline import default_pipeline
+
+OUT_DIR = (pathlib.Path(__file__).resolve().parent.parent
+           / "results" / "pareto")
+
+SMOKE_GRID = CalibrationGrid(
+    adc_bits=(3, 4),
+    rows_active=(8, 16),
+    coarse_bits=(1,),
+    variants=("p8t", "adder-tree", "cell-adc"),
+    cutoff=(0.5,),
+    vdd=(0.6, 0.9),
+)
+
+
+def _round(x, nd: int = 6):
+    return None if x is None else round(float(x), nd)
+
+
+def report_dict(model: str, result, points) -> dict:
+    grid = dataclasses.asdict(result.grid)
+    return {
+        "model": model,
+        "cost_unit": result.cost_unit,
+        "slack": _round(result.slack),
+        "grid": {k: list(v) for k, v in sorted(grid.items())},
+        "points": [
+            {
+                "variant": p.variant,
+                "vdd": _round(p.vdd),
+                "tops_per_w": _round(p.tops_per_w, 4),
+                "score": _round(p.score),
+                "accuracy": _round(p.accuracy),
+                "frontier": p.frontier,
+            }
+            for p in points
+        ],
+    }
+
+
+def markdown_table(payload: dict) -> str:
+    lines = [
+        f"# Pareto report — {payload['model']} (variants x vdd)",
+        "",
+        "| variant | vdd (V) | TOPS/W | rel-L2 | top-1 | frontier |",
+        "|---|---|---|---|---|---|",
+    ]
+    for p in payload["points"]:
+        acc = "—" if p["accuracy"] is None else f"{p['accuracy']:.4f}"
+        star = "*" if p["frontier"] else ""
+        lines.append(
+            f"| {p['variant']} | {p['vdd']:.2f} | "
+            f"{p['tops_per_w']:.2f} | {p['score']:.4f} | {acc} | "
+            f"{star} |"
+        )
+    lines += ["", "`*` = on the accuracy-vs-TOPS/W frontier.", ""]
+    return "\n".join(lines)
+
+
+def write_report(model: str, result, points, out_dir=None):
+    """Write <model>.json + <model>.md; returns the two paths."""
+    out = pathlib.Path(out_dir) if out_dir is not None else OUT_DIR
+    out.mkdir(parents=True, exist_ok=True)
+    payload = report_dict(model, result, points)
+    jpath = out / f"{model}.json"
+    jpath.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    mpath = out / f"{model}.md"
+    mpath.write_text(markdown_table(payload))
+    return jpath, mpath
+
+
+def stub_eval_fn(scale: float = 2.0):
+    """Deterministic accuracy stub from the fidelity proxy.
+
+    Maps the mean selected rel-L2 of a candidate plan to a pseudo
+    top-1 in [0, 1] — monotone in fidelity, cheap, and a pure function
+    of the plan, so smoke reports are byte-identical across re-runs.
+    """
+
+    def eval_fn(result) -> float:
+        score = float(np.mean([lc.score for lc in result.layers.values()]))
+        return round(max(0.0, 1.0 - scale * score), 6)
+
+    return eval_fn
+
+
+def smoke_calibration(seed: int = 0):
+    """A tiny 2-layer synthetic model calibrated on the smoke grid."""
+    rng = np.random.default_rng(seed)
+    weights = {
+        "l1": jnp.asarray(rng.normal(size=(32, 8)) * 0.1, jnp.float32),
+        "l2": jnp.asarray(rng.normal(size=(16, 8)) * 0.1, jnp.float32),
+    }
+    acts = {
+        k: jnp.asarray(
+            np.maximum(rng.normal(size=(32, w.shape[0])), 0), jnp.float32
+        )
+        for k, w in weights.items()
+    }
+    return cal.calibrate(
+        default_pipeline(), weights, acts, SMOKE_GRID,
+        n_noise_keys=2, seed=seed,
+    )
+
+
+def main(quick: bool = True, smoke: bool = False, out_dir=None) -> None:
+    from benchmarks.common import emit
+
+    if smoke:
+        result = smoke_calibration()
+        eval_fn = stub_eval_fn()
+        refined = cal.refine(result, eval_fn, budget=4, tol=0.05)
+        points = refined.pareto(eval_fn=eval_fn)
+        jpath, _ = write_report("smoke2", refined, points, out_dir)
+        emit("pareto_smoke_points", 0.0, f"n={len(points)}")
+        emit(
+            "pareto_smoke_refine", 0.0,
+            f"topsw={refined.effective_tops_per_w():.2f},"
+            f"seed_topsw={result.effective_tops_per_w():.2f},"
+            f"evals={refined.refinement.evals_used}",
+        )
+        frontier = [p for p in points if p.frontier]
+        assert frontier, "empty pareto frontier"
+        assert (refined.effective_tops_per_w()
+                >= result.effective_tops_per_w() - 1e-9), \
+            "refinement regressed TOPS/W"
+        print(f"# wrote {jpath}")
+        return
+
+    from benchmarks.common import RESNET_CFG, cim_policy, \
+        train_resnet_baseline
+
+    params, bn, ds = train_resnet_baseline()
+    pol = cim_policy(noisy=True)
+    rcfg = dataclasses.replace(RESNET_CFG, cim=pol)
+    n_cal = 64 if quick else 256
+    images = jnp.asarray(ds.batch(n_cal, step=0, train=False)["image"])
+    # Quick profile: 16 rows only and a small held-out batch — each
+    # candidate eval is an eager end-to-end forward (~tens of seconds
+    # on the full-width net), and evals are memoized per supply-
+    # stripped plan, so the budget bounds the wall time directly.
+    grid = CalibrationGrid(
+        adc_bits=(3, 4, 5),
+        rows_active=(16,) if quick else (8, 16),
+        coarse_bits=(1,),
+        variants=("p8t", "adder-tree", "cell-adc"),
+        vdd=(0.6, 0.9, 1.2),
+    )
+    result = cal.calibrate_resnet(
+        params, bn, images, rcfg, grid=grid,
+        max_samples=64 if quick else 256,
+    )
+    held = ds.batch(16 if quick else 64, step=7, train=False)
+    eval_fn = cal.resnet_eval_fn(
+        params, bn, jnp.asarray(held["image"]), held["label"], rcfg,
+        key=jax.random.PRNGKey(1),
+    )
+    refined = cal.refine(result, eval_fn, budget=4 if quick else 12,
+                         tol=0.01)
+    points = refined.pareto(eval_fn=eval_fn)
+    jpath, mpath = write_report("resnet", refined, points, out_dir)
+    r = refined.refinement
+    emit(
+        "pareto_resnet_refine", 0.0,
+        f"top1={r.final_accuracy:.4f},seed_top1={r.seed_accuracy:.4f},"
+        f"topsw={refined.effective_tops_per_w():.2f},"
+        f"seed_topsw={result.effective_tops_per_w():.2f}",
+    )
+    emit("pareto_resnet_points", 0.0,
+         f"n={len(points)},frontier={sum(p.frontier for p in points)}")
+    print(f"# wrote {jpath} and {mpath}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-fidelity sample counts (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + stub eval (what CI runs)")
+    ap.add_argument("--out", default=None,
+                    help="output directory (default results/pareto/)")
+    args = ap.parse_args()
+    main(quick=not args.full, smoke=args.smoke, out_dir=args.out)

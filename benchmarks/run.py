@@ -19,6 +19,7 @@ from benchmarks import (
     fig9_dac_adc,
     fig10_energy,
     kernel_bench,
+    pareto,
     roofline,
     table1_accuracy,
     table2_summary,
@@ -34,6 +35,7 @@ ALL = {
     "table2": table2_summary.main,
     "kernel": kernel_bench.main,
     "kernels": kernel_bench.kernels_main,
+    "pareto": pareto.main,
     "plan": kernel_bench.planned_main,
     "roofline": roofline.main,
     "variants": variants_bench.main,

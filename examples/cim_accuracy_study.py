@@ -10,14 +10,18 @@ operating point.
 import argparse
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (
     RESNET_CFG, cim_policy, evaluate, train_resnet_baseline,
 )
+from benchmarks.pareto import markdown_table, report_dict, write_report
 from repro.configs.base import CIMPolicy
 from repro.core import calibrate_resnet
-from repro.core.calibrate import CalibrationGrid
+from repro.core.calibrate import (
+    CalibrationGrid, refine, resnet_eval_fn,
+)
 
 
 def main():
@@ -102,10 +106,44 @@ def main():
     print(f"accuracy with variant-calibrated backend: {acc_v:.3f} "
           f"(drop {fp-acc_v:+.3f})")
 
+    print("\n=== accuracy-driven refinement + variants x vdd pareto ===")
+    # Phase two of the co-design: re-sweep with cutoff/vdd axes (cost
+    # becomes J/op via the energy model), then greedily refine against
+    # REAL held-out top-1 accuracy — each candidate eval is a full
+    # forward through engine.execute / kernels.dispatch — and report
+    # the per-model accuracy-vs-TOPS/W frontier across variants x vdd.
+    vdd_grid = CalibrationGrid(
+        variants=("p8t", "adder-tree", "cell-adc"),
+        rows_active=(16,) if args.fast else (8, 16),
+        coarse_bits=(1,),
+        vdd=(0.6, 0.9, 1.2),
+    )
+    eres = calibrate_resnet(params, bn, images, rcfg, grid=vdd_grid,
+                            max_samples=128 if args.fast else 256)
+    # Each candidate eval is an eager end-to-end forward over the
+    # held-out batch; evals are memoized per supply-stripped plan, so
+    # the budget bounds the wall time directly.
+    held = ds.batch(32 if args.fast else 64, step=7, train=False)
+    eval_fn = resnet_eval_fn(
+        params, bn, jnp.asarray(held["image"]), held["label"], rcfg,
+        key=jax.random.PRNGKey(1),
+    )
+    refined = refine(eres, eval_fn, budget=4 if args.fast else 12,
+                     tol=0.01)
+    print(refined.summary())
+    print(f"effective TOPS/W: seed {eres.effective_tops_per_w():.2f} "
+          f"-> refined {refined.effective_tops_per_w():.2f}")
+    points = refined.pareto(eval_fn=eval_fn)
+    jpath, mpath = write_report("resnet_study", refined, points)
+    print(markdown_table(report_dict("resnet_study", refined, points)))
+    print(f"(written to {jpath} and {mpath})")
+
     print("\nExpected orderings (the paper's claims): accuracy falls "
           "with more active rows under noise; 4-bit ADC ~ 5-bit under "
           "noise; cutoff 0.5 costs <~1-2% vs fp; the calibration sweep "
-          "lands on the paper's 4-bit/16-row operating point.")
+          "lands on the paper's 4-bit/16-row operating point; "
+          "refinement never regresses TOPS/W and holds held-out top-1 "
+          "within tolerance.")
 
 
 if __name__ == "__main__":

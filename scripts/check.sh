@@ -30,3 +30,9 @@ fi
 # registered Pallas kernel ever resolves to the jnp scan.
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/run.py --only plan,variants,kernels --smoke
+# Pareto/refinement smoke: tiny grid + stub eval exercises the
+# cutoff/vdd sweep axes, the energy cost model, greedy refinement and
+# the byte-deterministic report writer; the full resnet refinement
+# lives under `pytest -m slow`, keeping tier-1 inside TIER1_BUDGET_S.
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/pareto.py --smoke

@@ -77,9 +77,12 @@ from repro.core.energy import (
     MacroEnergyReport,
     adc_energy_comparison,
     energy_per_cycle_j,
+    fitted_vt,
     frequency_mhz,
     layer_energy_j,
     macro_report,
+    op_energy_j,
+    validate_vdd,
     variant_tops_per_w,
 )
 # NOTE: engine.matmul (the one-shot QAT entry point) is deliberately
@@ -103,10 +106,17 @@ from repro.core.calibrate import (
     CalibrationGrid,
     CalibrationResult,
     LayerCalibration,
+    ParetoPoint,
+    RefineMove,
+    RefineReport,
     adc_code_table,
     calibrate_resnet,
     calibrated_backend,
     hw_cost,
+    load_result,
+    refine,
+    resnet_eval_fn,
+    save_result,
 )
 from repro.core.macro import MacroOut, macro_op, macro_op_reference_digital
 from repro.core.matmul import (
@@ -184,7 +194,10 @@ __all__ = [
     "PAPER_MACRO_8ROWS",
     "PAPER_OP_16ROWS",
     "PAPER_OP_8ROWS",
+    "ParetoPoint",
     "PlannedWeights",
+    "RefineMove",
+    "RefineReport",
     "QuantizedActs",
     "QuantizedWeights",
     "ShiftAddStage",
@@ -216,16 +229,19 @@ __all__ = [
     "hw_cost",
     "fake_quant_acts",
     "fake_quant_weights",
+    "fitted_vt",
     "frequency_mhz",
     "get_backend",
     "get_variant",
     "layer_energy_j",
+    "load_result",
     "macro_op",
     "macro_op_reference_digital",
     "macro_report",
     "merged_quant",
     "merged_transfer_int",
     "multiply_bitcell",
+    "op_energy_j",
     "plan_params",
     "plan_weights",
     "plane_signs",
@@ -235,9 +251,13 @@ __all__ = [
     "quantize_weights",
     "quantized_backend",
     "reference_voltages",
+    "refine",
     "register_backend",
     "register_variant",
+    "resnet_eval_fn",
+    "save_result",
     "unslice_weights",
+    "validate_vdd",
     "variant_names",
     "variant_tops_per_w",
 ]

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Any
 
 from repro.core.params import CIMConfig
 
@@ -93,6 +94,37 @@ def _fit_frequency() -> tuple[float, float]:
 _KF, _VT = _fit_frequency()
 
 
+def fitted_vt() -> float:
+    """The fitted threshold voltage of the frequency model (volts).
+
+    Below this supply the fitted f(V) = kf * (V - Vt) is non-positive —
+    the macro has no clock — so every energy/performance quantity is
+    undefined. ``validate_vdd`` is the single gate; the calibration
+    sweep applies it to the ``vdd`` grid axis up front.
+    """
+    return _VT
+
+
+def validate_vdd(vdd: float, *, what: str = "vdd") -> float:
+    """Raise ValueError unless ``vdd`` is above the fitted Vt.
+
+    The frequency fit f(V) = kf * (V - Vt) goes non-positive at Vt
+    (~0.47 V, see :func:`fitted_vt`) and ln(V/0.6) is undefined at
+    V <= 0 — without this gate a swept supply axis either raises
+    mid-sweep from inside a vmapped batch or silently produces garbage
+    TOPS/W.
+    """
+    if not (isinstance(vdd, (int, float)) and math.isfinite(vdd)):
+        raise ValueError(f"{what}={vdd!r} is not a finite number")
+    if vdd <= _VT:
+        raise ValueError(
+            f"{what}={vdd} at or below fitted Vt={_VT:.3f} V: the "
+            f"frequency/energy model is undefined there (paper range "
+            f"0.6-1.2 V)"
+        )
+    return float(vdd)
+
+
 @dataclasses.dataclass(frozen=True)
 class MacroEnergyReport:
     vdd: float
@@ -113,13 +145,13 @@ class MacroEnergyReport:
 
 
 def energy_per_cycle_j(vdd: float) -> float:
+    validate_vdd(vdd)
     u = math.log(vdd / 0.6)
     return math.exp(_C0 + _C1 * u + _C2 * u * u)
 
 
 def frequency_mhz(vdd: float) -> float:
-    if vdd <= _VT:
-        raise ValueError(f"vdd={vdd} at or below fitted Vt={_VT:.3f}")
+    validate_vdd(vdd)
     return _KF * (vdd - _VT)
 
 
@@ -184,6 +216,40 @@ def _variant_energy_per_cycle_j(
     return ops / (variant_tops_per_w(vdd, variant) * 1e12)
 
 
+# The ADC's share of total energy at the anchor operating point
+# (Fig. 10(b) decomposition; same split macro_report reports).
+_ADC_ENERGY_SHARE = (1.0 - _AMU_ENERGY_FRAC) * 0.55
+
+
+def op_energy_j(cfg: CIMConfig | Any, variant: str = "p8t") -> float:
+    """Joules per MAC at this operating point — the sweep's energy cost.
+
+    The published TOPS/W anchor fixes the per-MAC energy at the
+    variant's *paper operating point* (2 ops/MAC); off-anchor grid
+    points move only the ADC's share (Fig. 10(b): ~48.7% of total at
+    the anchor), scaled by the variant's comparator evaluations per
+    MAC relative to its anchor point, while the AMU + digital share is
+    carried per MAC unchanged. Documented modeling assumption — the
+    best analytic stance without per-point silicon sweeps; exact at
+    every variant's own anchor, and monotone in the hw_cost knobs the
+    calibration sweep trades (fewer ADC bits / more active rows ->
+    fewer J/MAC; higher vdd -> more, along the fitted curve).
+
+    This is the cost axis ``core.calibrate`` uses when a ``vdd`` grid
+    axis is swept: J/op instead of comparator evaluations alone, so
+    supply voltage and ADC configuration land on one comparable scale.
+    """
+    from repro.core import variants as variants_lib  # lazy: no cycle
+
+    var = variants_lib.get(variant)
+    spec = var.adapt_spec(cfg)
+    validate_vdd(spec.vdd)
+    e_mac = 2.0 / (variant_tops_per_w(spec.vdd, variant) * 1e12)
+    anchor = var.anchor_spec(spec)
+    rel_adc = var.hw_cost(spec) / var.hw_cost(anchor)
+    return e_mac * (_ADC_ENERGY_SHARE * rel_adc + (1.0 - _ADC_ENERGY_SHARE))
+
+
 def macro_report(cfg: CIMConfig, variant: str = "p8t") -> MacroEnergyReport:
     geo = _variant_geometry(cfg, variant)
     topsw = variant_tops_per_w(cfg.vdd, variant)
@@ -192,7 +258,7 @@ def macro_report(cfg: CIMConfig, variant: str = "p8t") -> MacroEnergyReport:
     conv, prop, saving = adc_energy_comparison()
     # Fig. 10(b): AMU 11.4%; remaining split between ADC and digital with
     # the ADC share consistent with its delay dominance at low VDD.
-    adc_frac = (1.0 - _AMU_ENERGY_FRAC) * 0.55
+    adc_frac = _ADC_ENERGY_SHARE
     digital_frac = 1.0 - _AMU_ENERGY_FRAC - adc_frac
     return MacroEnergyReport(
         vdd=cfg.vdd,

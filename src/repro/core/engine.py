@@ -416,6 +416,16 @@ def _pallas_int(x_codes, plan, cfg, key):
     )
 
 
+# The built-in execution backends (registered below). Serving-time
+# calibration auto-registration must never overwrite these or their
+# legacy mode aliases.
+BUILTIN_BACKENDS = frozenset({"fp", "exact", "behavioral", "pallas"})
+
+
+def is_builtin_backend(name: str) -> bool:
+    return name in BUILTIN_BACKENDS or name in _MODE_ALIASES
+
+
 register_backend("fp", _fp_backend)
 register_backend("exact", quantized_backend(_exact_int))
 register_backend("behavioral", quantized_backend(_behavioral_int))

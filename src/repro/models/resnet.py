@@ -291,6 +291,38 @@ def forward(
     return logits, new_state
 
 
+def top1_accuracy(
+    params: dict,
+    bn_state: dict,
+    images: jax.Array,
+    labels: jax.Array,
+    cfg: ResNetConfig,
+    *,
+    key: jax.Array | None = None,
+    batch_size: int | None = None,
+) -> float:
+    """Held-out top-1 accuracy of (possibly planned) params.
+
+    The end-to-end objective the accuracy-refinement phase of
+    ``core.calibrate.refine`` optimizes: every conv runs its real
+    execution path (im2col -> ``engine.execute`` -> kernels.dispatch)
+    under ``cfg.cim``, so a calibrated/refined backend is measured
+    exactly as it will serve. Eager (no jit): candidate operating
+    points change per call, and held-out batches are small.
+    """
+    labels = jnp.asarray(labels)
+    n = int(images.shape[0])
+    bs = n if batch_size is None else int(batch_size)
+    correct = 0
+    for s in range(0, n, bs):
+        k = None if key is None else jax.random.fold_in(key, s)
+        logits, _ = forward(params, bn_state, images[s:s + bs], cfg,
+                            train=False, key=k)
+        pred = jnp.argmax(logits, axis=-1)
+        correct += int(jnp.sum(pred == labels[s:s + bs]))
+    return correct / n
+
+
 def loss_fn(params, bn_state, batch, cfg: ResNetConfig, *, train=True,
             key=None):
     logits, new_state = forward(params, bn_state, batch["image"], cfg,

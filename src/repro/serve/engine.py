@@ -58,6 +58,17 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int,
                  batch: int, plan: bool = False, donate_plan: bool = False,
                  mesh=None, calibration=None):
+        if calibration is not None and cfg.cim.backend and \
+                not cim_engine.is_builtin_backend(cfg.cim.backend):
+            # Serving a (restored) calibration: the explicitly passed
+            # result wins — register it under the policy's backend
+            # name, overwriting any calibration previously registered
+            # there, so a stale backend can never silently serve
+            # another result's specs (e.g. `load_result(path)` in a
+            # process that already served a different calibration).
+            # Built-in backends are never clobbered; against those the
+            # calibration is plan-grouping-only.
+            calibration.register(cfg.cim.backend)
         if plan:
             params = cim_engine.plan_params(
                 params, policy=cfg.cim, calibration=calibration
@@ -128,6 +139,7 @@ class ServeEngine:
         max_len: int,
         batch: int,
         step: int | None = None,
+        calibration=None,
     ) -> "ServeEngine":
         """Warm-start a server from a checkpointed *planned* tree.
 
@@ -137,15 +149,24 @@ class ServeEngine:
         plans come back exactly as the saver wrote them. Counterpart of
         ``store.save(plan_params(params, policy=cfg.cim), dir, step)``
         (or ``Trainer.planned_params`` at the train->serve handoff).
+
+        ``calibration`` must match the saver's: it shapes the restore
+        target (plans grouped at each layer's calibrated ``rows_active``)
+        and is registered as ``cfg.cim.backend`` if that backend is not
+        live yet — so a refined result persisted with
+        ``calibrate.save_result`` restores and serves in one call.
         """
         from repro.checkpoint import store  # lazy: optional at serve time
 
         sds_params = jax.eval_shape(
             lambda: transformer.init(jax.random.PRNGKey(0), cfg)
         )
-        target = cim_engine.plan_params(sds_params, policy=cfg.cim)
+        target = cim_engine.plan_params(
+            sds_params, policy=cfg.cim, calibration=calibration
+        )
         planned = store.restore(directory, target, step=step)
-        return cls(planned, cfg, max_len=max_len, batch=batch, plan=False)
+        return cls(planned, cfg, max_len=max_len, batch=batch, plan=False,
+                   calibration=calibration)
 
     def generate(self, prompts: jax.Array, n_tokens: int) -> np.ndarray:
         """Greedy-decode n_tokens after the prompt batch [B, S]."""

@@ -134,6 +134,90 @@ class TestCalibrate:
             cal.calibrate(default_pipeline(), {"l": w}, {"l": x})
 
 
+class TestSweepAxes:
+    """The cutoff / vdd grid axes (paper Sec. IV's remaining knobs)."""
+
+    def test_vdd_axis_validated_up_front(self):
+        """A sub-Vt supply point fails fast with a clear error before
+        any scoring work, not mid-sweep from a vmapped batch."""
+        w, x = _FIXED_LAYER
+        with pytest.raises(ValueError, match="vdd axis point.*fitted Vt"):
+            cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                          cal.CalibrationGrid(vdd=(0.6, 0.3)))
+
+    def test_cutoff_axis_validated_up_front(self):
+        w, x = _FIXED_LAYER
+        with pytest.raises(ValueError, match="cutoff axis point"):
+            cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                          cal.CalibrationGrid(cutoff=(0.5, 1.0)))
+
+    def test_vdd_axis_switches_cost_to_energy(self):
+        """With a vdd axis the cost is fJ/MAC from energy.op_energy_j;
+        fidelity is supply-invariant, so the cheaper supply wins."""
+        from repro.core import energy
+
+        w, x = _FIXED_LAYER
+        res = cal.calibrate(
+            default_pipeline(), {"l": w}, {"l": x},
+            cal.CalibrationGrid(adc_bits=(4,), rows_active=(16,),
+                                coarse_bits=(1,), vdd=(0.9, 0.6)),
+            noisy=False,
+        )
+        assert res.cost_unit == "fJ/MAC"
+        lc = res.layers["l"]
+        assert {p.spec.vdd for p in lc.table} == {0.6, 0.9}
+        by_vdd = {p.spec.vdd: p for p in lc.table}
+        assert by_vdd[0.6].score == by_vdd[0.9].score  # supply-invariant
+        assert by_vdd[0.6].cost < by_vdd[0.9].cost
+        assert lc.spec.vdd == 0.6
+        assert lc.cost == pytest.approx(
+            energy.op_energy_j(lc.spec, lc.variant) * 1e15
+        )
+
+    def test_cutoff_infeasible_point_skipped_with_reason(self):
+        """A swept cutoff pushing in-SRAM reference levels beyond the
+        arrays' range skips that grid point (with a recorded reason)
+        instead of aborting the whole sweep."""
+        w, x = _FIXED_LAYER
+        res = cal.calibrate(
+            default_pipeline(), {"l": w}, {"l": x},
+            cal.CalibrationGrid(adc_bits=(4, 8), rows_active=(16,),
+                                coarse_bits=(1,), cutoff=(0.0, 0.5)),
+            noisy=False,
+        )
+        lc = res.layers["l"]
+        pts = {(p.spec.adc_bits, p.spec.cutoff) for p in lc.table}
+        # 8-bit @ cutoff 0: level 255 exceeds 16 arrays x act_max 15;
+        # 8-bit @ cutoff 0.5: threshold 128 has no integer 256-code
+        # spacing. Both skipped; both 4-bit points survive.
+        assert pts == {(4, 0.0), (4, 0.5)}
+        assert any("not representable" in s for s in lc.skipped)
+        assert any("reference spacing" in s for s in lc.skipped)
+
+    def test_fallback_tie_break_deterministic(self):
+        """slack < 1 forces the nothing-within-slack fallback: exact
+        score ties (the coarse-split twins of one scored point) break
+        by cost then grid order, so repeated sweeps select identical
+        plans."""
+        w, x = _FIXED_LAYER
+        grid = cal.CalibrationGrid(adc_bits=(4, 5), rows_active=(8, 16),
+                                   coarse_bits=(1, 2))
+        kw = dict(noisy=False, slack=0.5)
+        r1 = cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                           grid, **kw)
+        r2 = cal.calibrate(default_pipeline(), {"l": w}, {"l": x},
+                           grid, **kw)
+        lc = r1.layers["l"]
+        assert (lc.spec, lc.variant) == (
+            r2.layers["l"].spec, r2.layers["l"].variant)
+        assert lc.score == min(p.score for p in lc.table)
+        ties = [p for p in lc.table if p.score == lc.score]
+        assert len(ties) >= 2  # the split twins share one score
+        assert lc.cost == min(p.cost for p in ties)
+        pick = min(ties, key=lambda p: (p.cost, p.order))
+        assert (lc.spec, lc.variant) == (pick.spec, pick.variant)
+
+
 class TestCalibrateResnet:
     def test_reproduces_paper_operating_point(self):
         """Acceptance: the sweep on resnet20-cifar(-family) lands on

@@ -1,0 +1,382 @@
+"""Accuracy-driven calibration phase two: greedy end-to-end refinement,
+the variants x vdd pareto report, and persistence of refined results.
+
+The paper selects its 4-bit/16-row point against end DNN accuracy;
+``calibrate.refine`` is that loop — the rel-L2 proxy sweep seeds a
+plan, then greedy per-layer moves toward cheaper grid points are
+accepted only when held-out top-1 accuracy stays within tolerance.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import CIMPolicy, get_config
+from repro.core import calibrate as cal, engine
+from repro.core.params import CIMConfig
+from repro.core.pipeline import default_pipeline
+from repro.models import resnet
+
+GRID = cal.CalibrationGrid(adc_bits=(3, 4), rows_active=(8, 16),
+                           coarse_bits=(1,))
+VDD_GRID = cal.CalibrationGrid(adc_bits=(3, 4), rows_active=(16,),
+                               coarse_bits=(1,),
+                               variants=("p8t", "cell-adc"),
+                               vdd=(0.6, 0.9))
+
+
+def _two_layer(seed=3):
+    rng = np.random.default_rng(seed)
+    weights = {
+        "a": jnp.asarray(rng.normal(size=(64, 8)) * 0.1, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(32, 8)) * 0.1, jnp.float32),
+    }
+    acts = {
+        k: jnp.asarray(
+            np.maximum(rng.normal(size=(32, w.shape[0])), 0), jnp.float32
+        )
+        for k, w in weights.items()
+    }
+    return weights, acts
+
+
+# Sweeps are deterministic and shared across tests (runtime).
+_SHARED: dict = {}
+
+
+def seed_result():
+    if "seed" not in _SHARED:
+        w, a = _two_layer()
+        _SHARED["seed"] = cal.calibrate(
+            default_pipeline(), w, a, GRID, noisy=False
+        )
+    return _SHARED["seed"]
+
+
+def vdd_result():
+    if "vdd" not in _SHARED:
+        w, a = _two_layer()
+        _SHARED["vdd"] = cal.calibrate(
+            default_pipeline(), w, a, VDD_GRID, noisy=False
+        )
+    return _SHARED["vdd"]
+
+
+# The deterministic pseudo-accuracy stub (single definition, shared
+# with the smoke benchmark).
+from benchmarks.pareto import stub_eval_fn as proxy_eval  # noqa: E402
+
+
+def total_cost(result):
+    return sum(lc.cost for lc in result.layers.values())
+
+
+class TestRefine:
+    def test_seed_untouched_when_no_move_acceptable(self):
+        res = seed_result()
+
+        def ev(r):
+            return 1.0 if r is res else 0.0  # every move tanks accuracy
+
+        out = cal.refine(res, ev, budget=16, tol=0.01)
+        assert out.layers is res.layers  # selections untouched
+        rep = out.refinement
+        assert rep.seed_accuracy == 1.0
+        assert rep.final_accuracy == 1.0
+        assert rep.moves and all(not m.accepted for m in rep.moves)
+
+    def test_cost_monotone_and_tolerance_respected(self):
+        res = seed_result()
+
+        def ev(r):
+            return 0.9 if r is res else 0.895  # within tol of the seed
+
+        out = cal.refine(res, ev, budget=8, tol=0.01)
+        rep = out.refinement
+        assert any(m.accepted for m in rep.moves)
+        # greedy only ever proposes strictly cheaper points
+        assert all(m.cost_after < m.cost_before for m in rep.moves)
+        assert total_cost(out) < total_cost(res)
+        assert rep.final_accuracy >= rep.seed_accuracy - 0.01
+
+    def test_below_tolerance_rejected(self):
+        res = seed_result()
+
+        def ev(r):
+            return 0.9 if r is res else 0.8  # below the floor
+
+        out = cal.refine(res, ev, budget=6, tol=0.05)
+        assert all(not m.accepted for m in out.refinement.moves)
+        assert total_cost(out) == total_cost(res)
+
+    def test_budget_counts_seed_eval(self):
+        res = seed_result()
+        n = [0]
+
+        def ev(r):
+            n[0] += 1
+            return 1.0  # everything accepted
+
+        out = cal.refine(res, ev, budget=3, tol=1.0)
+        assert n[0] == 3
+        assert out.refinement.evals_used == 3
+        with pytest.raises(ValueError, match="budget"):
+            cal.refine(res, ev, 0)
+
+    def test_deterministic_under_fixed_keys(self):
+        res = seed_result()
+        o1 = cal.refine(res, proxy_eval(), budget=6, tol=0.02)
+        o2 = cal.refine(res, proxy_eval(), budget=6, tol=0.02)
+        assert o1.refinement == o2.refinement
+        assert {k: (lc.spec, lc.variant) for k, lc in o1.layers.items()} \
+            == {k: (lc.spec, lc.variant) for k, lc in o2.layers.items()}
+
+    def test_refined_result_executes_end_to_end(self):
+        """An accepted-move plan registers and runs through
+        engine.execute (the replay path sees the refined specs)."""
+        res = seed_result()
+
+        def ev(r):
+            return 1.0  # accept everything: maximally-moved plan
+
+        out = cal.refine(res, ev, budget=4, tol=1.0)
+        name = out.register("analog-refined-test")
+        try:
+            w, _ = _two_layer()
+            policy = CIMPolicy(mode="cim", backend=name,
+                               cim=res.base.to_config())
+            plan = engine.plan_weights(w["a"], policy.cim, policy)
+            x = jnp.asarray(
+                np.maximum(np.random.default_rng(0).normal(
+                    size=(4, 64)), 0), jnp.float32)
+            y = engine.execute(x, plan, policy)
+            assert y.shape == (4, 8)
+            assert bool(jnp.all(jnp.isfinite(y)))
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+
+class TestRefineResnet:
+    def test_resnet_refine_matches_or_beats_seed_topsw(self):
+        """Acceptance: on the smoke grid, refinement reproduces or
+        beats the proxy-selected plan's TOPS/W at equal-or-better
+        held-out accuracy, with every candidate eval a real end-to-end
+        pass (im2col -> engine.execute -> kernels.dispatch)."""
+        rcfg = resnet.ResNetConfig(
+            widths=(8,), blocks_per_stage=1,
+            cim=CIMPolicy(
+                mode="cim",
+                cim=CIMConfig(rows_active=16, cutoff=0.5, adc_bits=4),
+                act_symmetric=True, act_clip_pct=0.995,
+            ),
+        )
+        params, bn = resnet.init(jax.random.PRNGKey(0), rcfg)
+        rng = np.random.default_rng(0)
+        images = jnp.asarray(
+            np.maximum(rng.normal(size=(8, 32, 32, 3)), 0), jnp.float32
+        )
+        labels = jnp.asarray(rng.integers(0, 10, size=(8,)), jnp.int32)
+        res = cal.calibrate_resnet(
+            params, bn, images, rcfg,
+            grid=cal.CalibrationGrid(adc_bits=(3, 4), rows_active=(16,),
+                                     coarse_bits=(1,), vdd=(0.6,)),
+            max_samples=32, n_noise_keys=1,
+        )
+        ev = cal.resnet_eval_fn(params, bn, images, labels, rcfg)
+        out = cal.refine(res, ev, budget=4, tol=0.0)
+        rep = out.refinement
+        assert out.effective_tops_per_w() \
+            >= res.effective_tops_per_w() - 1e-9
+        assert rep.final_accuracy >= rep.seed_accuracy  # tol=0
+        assert 0.0 <= rep.seed_accuracy <= 1.0
+        # the throwaway eval backend never leaks into the registry
+        assert "__calibrate_eval__" not in engine.backend_names()
+
+
+class TestPareto:
+    def test_frontier_across_variants_and_vdd(self):
+        res = vdd_result()
+        pts = res.pareto()  # proxy-ranked (no eval_fn)
+        assert len(pts) == 4  # 2 variants x 2 vdd
+        by = {(p.variant, p.vdd): p for p in pts}
+        # Fidelity is supply-invariant, so within a variant the higher
+        # supply (lower TOPS/W, equal score) is always dominated.
+        for v in ("p8t", "cell-adc"):
+            assert not by[(v, 0.9)].frontier
+            assert by[(v, 0.6)].score == by[(v, 0.9)].score
+            assert by[(v, 0.6)].tops_per_w > by[(v, 0.9)].tops_per_w
+        # cell-adc shares the flash floor transfer (identical scores)
+        # but is strictly more efficient: it must be on the frontier
+        # and dominate p8t at the same supply.
+        assert by[("cell-adc", 0.6)].frontier
+        assert by[("cell-adc", 0.6)].score \
+            == pytest.approx(by[("p8t", 0.6)].score)
+        assert not by[("p8t", 0.6)].frontier
+        assert all(p.accuracy is None for p in pts)
+
+    def test_eval_fn_supplies_accuracy_axis(self):
+        res = vdd_result()
+        pts = res.pareto(eval_fn=proxy_eval())
+        assert all(p.accuracy is not None for p in pts)
+        assert any(p.frontier for p in pts)
+
+    def test_explicit_vdds_validated(self):
+        res = vdd_result()
+        with pytest.raises(ValueError, match="fitted Vt"):
+            res.pareto(vdds=(0.6, 0.2))
+
+    def test_supply_invariant_evals_memoized(self):
+        """Execution is vdd-invariant, so each variant is evaluated
+        once — not once per supply point."""
+        res = vdd_result()
+        calls = []
+
+        def ev(r):
+            calls.append(1)
+            return 0.5
+
+        pts = res.pareto(eval_fn=ev)
+        assert len(pts) == 4  # 2 variants x 2 vdd
+        assert len(calls) == 2  # one real eval per variant
+
+
+class TestPersistence:
+    def test_save_load_roundtrip_and_byte_determinism(self, tmp_path):
+        refined = cal.refine(vdd_result(), proxy_eval(), budget=3,
+                             tol=1.0)
+        p1 = cal.save_result(refined, tmp_path / "r.json")
+        loaded = cal.load_result(p1)
+        assert loaded.cost_unit == refined.cost_unit
+        assert loaded.grid == refined.grid
+        assert loaded.refinement == refined.refinement
+        assert set(loaded.layers) == set(refined.layers)
+        for k, lc in loaded.layers.items():
+            assert lc.spec == refined.layers[k].spec
+            assert lc.variant == refined.layers[k].variant
+            assert lc.table == ()  # sweep tables are not persisted
+        p2 = cal.save_result(loaded, tmp_path / "r2.json")
+        assert p1.read_bytes() == p2.read_bytes()
+
+    def test_refine_and_pareto_require_sweep_tables(self):
+        """A loaded result has no sweep tables: refine/pareto raise
+        up front (before spending the expensive seed eval) instead of
+        silently no-opping / returning an empty frontier."""
+        loaded = cal.result_from_dict(cal.result_to_dict(seed_result()))
+        calls = []
+
+        def ev(r):
+            calls.append(1)
+            return 1.0
+
+        with pytest.raises(ValueError, match="sweep tables"):
+            cal.refine(loaded, ev, budget=4)
+        assert not calls  # guard fires before the seed eval
+        with pytest.raises(ValueError, match="sweep tables"):
+            loaded.pareto()
+
+    def test_loaded_result_registers_and_executes(self, tmp_path):
+        path = cal.save_result(vdd_result(), tmp_path / "r.json")
+        loaded = cal.load_result(path)
+        name = loaded.register("analog-loaded-test")
+        try:
+            w, _ = _two_layer()
+            policy = CIMPolicy(mode="cim", backend=name,
+                               cim=loaded.base.to_config())
+            plan = engine.plan_weights(w["a"], policy.cim, policy)
+            x = jnp.asarray(
+                np.maximum(np.random.default_rng(1).normal(
+                    size=(4, 64)), 0), jnp.float32)
+            y = engine.execute(x, plan, policy)
+            assert bool(jnp.all(jnp.isfinite(y)))
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+    def test_serve_engine_auto_registers_restored_calibration(self):
+        """ServeEngine(calibration=...) registers the policy's named
+        backend when it is not live yet — restore-then-serve in one
+        step."""
+        loaded = cal.result_from_dict(
+            cal.result_to_dict(seed_result())
+        )
+        name = "analog-served-test"
+        assert name not in engine.backend_names()
+        base = get_config("qwen2_0_5b", smoke=True)
+        cfg = base.replace(cim=CIMPolicy(
+            mode="cim", backend=name, cim=loaded.base.to_config()))
+        from repro.models import transformer
+        from repro.serve.engine import ServeEngine
+
+        params = transformer.init(jax.random.PRNGKey(0), cfg)
+        try:
+            ServeEngine(params, cfg, max_len=16, batch=1,
+                        calibration=loaded)
+            assert name in engine.backend_names()
+            # An explicitly passed calibration always wins: a second
+            # engine with a different result re-registers the backend
+            # (a stale one can never silently serve another's specs).
+            stale_fn = engine._BACKENDS[name]
+            other = cal.result_from_dict(cal.result_to_dict(vdd_result()))
+            ServeEngine(params, cfg, max_len=16, batch=1,
+                        calibration=other)
+            assert engine._BACKENDS[name] is not stale_fn
+        finally:
+            engine._BACKENDS.pop(name, None)
+
+
+class TestParetoBenchmark:
+    def test_smoke_report_byte_deterministic(self, tmp_path):
+        from benchmarks import pareto as pbench
+
+        d1, d2 = tmp_path / "a", tmp_path / "b"
+        pbench.main(smoke=True, out_dir=d1)
+        pbench.main(smoke=True, out_dir=d2)
+        assert (d1 / "smoke2.json").read_bytes() \
+            == (d2 / "smoke2.json").read_bytes()
+        assert (d1 / "smoke2.md").read_bytes() \
+            == (d2 / "smoke2.md").read_bytes()
+        import json
+
+        payload = json.loads((d1 / "smoke2.json").read_text())
+        assert payload["cost_unit"] == "fJ/MAC"
+        assert len(payload["points"]) == 6  # 3 variants x 2 vdd
+        assert any(p["frontier"] for p in payload["points"])
+
+
+@pytest.mark.slow
+class TestRefineSlow:
+    def test_full_grid_resnet_refinement(self):
+        """The full refinement loop on the paper grid with variants
+        and a vdd axis (opt-in: pytest -m slow)."""
+        rcfg = resnet.ResNetConfig(
+            widths=(8, 16), blocks_per_stage=1,
+            cim=CIMPolicy(
+                mode="cim",
+                cim=CIMConfig(rows_active=16, cutoff=0.5, adc_bits=4),
+                act_symmetric=True, act_clip_pct=0.995,
+            ),
+        )
+        params, bn = resnet.init(jax.random.PRNGKey(0), rcfg)
+        rng = np.random.default_rng(0)
+        images = jnp.asarray(
+            np.maximum(rng.normal(size=(16, 32, 32, 3)), 0), jnp.float32
+        )
+        labels = jnp.asarray(rng.integers(0, 10, size=(16,)), jnp.int32)
+        res = cal.calibrate_resnet(
+            params, bn, images, rcfg,
+            grid=cal.CalibrationGrid(
+                variants=("p8t", "adder-tree", "cell-adc"),
+                rows_active=(8, 16),
+                vdd=(0.6, 0.9, 1.2),
+            ),
+            max_samples=64, n_noise_keys=2,
+        )
+        ev = cal.resnet_eval_fn(params, bn, images, labels, rcfg,
+                                key=jax.random.PRNGKey(2))
+        out = cal.refine(res, ev, budget=8, tol=0.02)
+        rep = out.refinement
+        assert out.effective_tops_per_w() \
+            >= res.effective_tops_per_w() - 1e-9
+        assert rep.final_accuracy >= rep.seed_accuracy - 0.02
+        pts = out.pareto(eval_fn=ev)
+        assert any(p.frontier for p in pts)

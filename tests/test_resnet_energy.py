@@ -118,3 +118,42 @@ class TestEnergyModel:
     def test_energy_monotone_in_vdd(self):
         es = [energy.energy_per_cycle_j(v) for v in (0.6, 0.8, 1.0, 1.2)]
         assert all(a < b for a, b in zip(es, es[1:]))
+
+    def test_sub_vt_vdd_raises_clearly(self):
+        """Both fitted-curve entry points reject supplies at/below the
+        fitted Vt instead of going non-positive / log-domain garbage —
+        the calibration sweep validates its vdd axis through the same
+        gate."""
+        vt = energy.fitted_vt()
+        assert 0.4 < vt < 0.6  # fit sanity: between 0 and the 0.6 anchor
+        for bad in (vt, 0.0, -1.0):
+            with pytest.raises(ValueError, match="fitted Vt"):
+                energy.frequency_mhz(bad)
+            with pytest.raises(ValueError, match="fitted Vt"):
+                energy.energy_per_cycle_j(bad)
+        with pytest.raises(ValueError, match="finite"):
+            energy.validate_vdd(float("nan"))
+        assert energy.validate_vdd(0.6) == 0.6
+
+    def test_op_energy_anchor_exact_and_monotone(self):
+        """J/MAC reproduces the published TOPS/W exactly at each
+        variant's anchor point and moves the right way with every
+        swept knob (the cost model of the vdd calibration axis)."""
+        cfg = CIMConfig(vdd=0.6)
+        e = energy.op_energy_j(cfg)
+        assert e * 50.07e12 / 2 == pytest.approx(1.0, rel=1e-9)
+        assert energy.op_energy_j(cfg, "cell-adc") * 137.5e12 / 2 \
+            == pytest.approx(1.0, rel=1e-9)
+        # fewer ADC bits -> cheaper; fewer active rows -> pricier
+        assert energy.op_energy_j(cfg.replace(adc_bits=3)) < e
+        assert energy.op_energy_j(cfg.replace(rows_active=8)) > e
+        # supply scales along the fitted curve
+        assert energy.op_energy_j(cfg.replace(vdd=0.9)) > e
+        assert energy.op_energy_j(cfg.replace(vdd=1.2)) \
+            > energy.op_energy_j(cfg.replace(vdd=0.9))
+        # cross-variant ordering at the anchor follows the published
+        # peaks (cell-adc 137.5 > p8t 50.07 > adder-tree 27.38)
+        assert energy.op_energy_j(cfg, "cell-adc") < e \
+            < energy.op_energy_j(cfg, "adder-tree")
+        with pytest.raises(ValueError, match="fitted Vt"):
+            energy.op_energy_j(cfg.replace(vdd=0.3))

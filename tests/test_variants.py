@@ -150,6 +150,27 @@ class TestOracleParity:
             )
             np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
+    def test_adder_tree_noisy_runs_under_trace(self):
+        """Regression: merged_sigma is computed in pure Python — the
+        noisy merged transfer runs inside the matmul's scan body (a
+        traced context), where reading a jnp plane_signs array back
+        with float() raised ConcretizationTypeError and broke every
+        noisy adder-tree execution (e.g. the calibrated backend under
+        a noisy policy during accuracy refinement)."""
+        spec = MacroSpec().replace(noisy=True)
+        x = jnp.asarray(RNG.integers(0, 16, (4, 50)), jnp.int32)
+        w = jnp.asarray(RNG.integers(-128, 128, (50, 8)), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        y = variants_lib.adder_tree_matmul_int(x, w, spec, key=key)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        # jitted caller: the whole transfer traces, same requirement
+        y2 = jax.jit(
+            lambda a, b, k: variants_lib.adder_tree_matmul_int(
+                a, b, spec, key=k
+            )
+        )(x, w, key)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
 
 class TestMonotonicity:
     """Noise-free transfer properties, mirroring test_properties.py
