@@ -1,165 +1,82 @@
 """Accuracy-vs-TOPS/W pareto report per model (variants x vdd).
 
-The paper picks its operating point by hardware-aware system
-simulation against end DNN accuracy; the variant cost anchors
-(single-ADC adder tree, arXiv:2212.04320; cell-embedded ADC,
-arXiv:2307.05944) only become actionable once accuracy and TOPS/W
-live on the same sweep axis. This benchmark sweeps every macro
-variant across the supply-voltage axis, measures (or stubs, in
-smoke mode) held-out top-1 accuracy per combination, and writes the
-frontier under ``results/pareto/<model>.json`` plus a markdown
-table — byte-deterministic across re-runs with the same keys (sorted
-keys, rounded floats, no timestamps).
+Since PR 6 this benchmark is a thin wrapper: the smoke study IS the
+committed ``configs/sweeps/pareto_smoke.json`` config executed through
+the ``repro.sweep`` harness (resumable ``points.jsonl`` + separate
+analysis pass), and the report helpers live in ``repro.sweep.report``
+/ ``repro.sweep.measures`` (re-exported here for compatibility).
 
   PYTHONPATH=src:. python benchmarks/pareto.py [--smoke|--full] [--out DIR]
 
 ``--smoke`` (what scripts/check.sh runs): a tiny 2-layer synthetic
 model on a tiny grid with a stub eval derived from the fidelity
-proxy — exercises the sweep axes, the energy cost model, a short
-greedy refinement and the report writer at CI scale, no training.
+proxy — byte-deterministic across re-runs. ``--full`` keeps the
+in-process ResNet path (calibrate + refine + ``result.pareto()``);
+the same study also exists as ``configs/sweeps/resnet_study.json``.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import pathlib
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import calibrate as cal
 from repro.core.calibrate import CalibrationGrid
-from repro.core.pipeline import default_pipeline
+from repro.sweep import analysis as sweep_analysis
+from repro.sweep import measures as sweep_measures
+from repro.sweep import runner as sweep_runner
+from repro.sweep.config import REPO_ROOT, load_config
+from repro.sweep.measures import smoke_calibration, stub_eval_fn  # noqa: F401 - compat re-export
+from repro.sweep.report import (  # noqa: F401 - compat re-export
+    markdown_table, report_dict, write_report,
+)
 
 OUT_DIR = (pathlib.Path(__file__).resolve().parent.parent
            / "results" / "pareto")
 
+SMOKE_CONFIG = REPO_ROOT / "configs" / "sweeps" / "pareto_smoke.json"
+
 SMOKE_GRID = CalibrationGrid(
-    adc_bits=(3, 4),
-    rows_active=(8, 16),
-    coarse_bits=(1,),
     variants=("p8t", "adder-tree", "cell-adc"),
-    cutoff=(0.5,),
     vdd=(0.6, 0.9),
+    **sweep_measures.SMOKE_GRID_KW,
 )
-
-
-def _round(x, nd: int = 6):
-    return None if x is None else round(float(x), nd)
-
-
-def report_dict(model: str, result, points) -> dict:
-    grid = dataclasses.asdict(result.grid)
-    return {
-        "model": model,
-        "cost_unit": result.cost_unit,
-        "slack": _round(result.slack),
-        "grid": {k: list(v) for k, v in sorted(grid.items())},
-        "points": [
-            {
-                "variant": p.variant,
-                "vdd": _round(p.vdd),
-                "tops_per_w": _round(p.tops_per_w, 4),
-                "score": _round(p.score),
-                "accuracy": _round(p.accuracy),
-                "frontier": p.frontier,
-            }
-            for p in points
-        ],
-    }
-
-
-def markdown_table(payload: dict) -> str:
-    lines = [
-        f"# Pareto report — {payload['model']} (variants x vdd)",
-        "",
-        "| variant | vdd (V) | TOPS/W | rel-L2 | top-1 | frontier |",
-        "|---|---|---|---|---|---|",
-    ]
-    for p in payload["points"]:
-        acc = "—" if p["accuracy"] is None else f"{p['accuracy']:.4f}"
-        star = "*" if p["frontier"] else ""
-        lines.append(
-            f"| {p['variant']} | {p['vdd']:.2f} | "
-            f"{p['tops_per_w']:.2f} | {p['score']:.4f} | {acc} | "
-            f"{star} |"
-        )
-    lines += ["", "`*` = on the accuracy-vs-TOPS/W frontier.", ""]
-    return "\n".join(lines)
-
-
-def write_report(model: str, result, points, out_dir=None):
-    """Write <model>.json + <model>.md; returns the two paths."""
-    out = pathlib.Path(out_dir) if out_dir is not None else OUT_DIR
-    out.mkdir(parents=True, exist_ok=True)
-    payload = report_dict(model, result, points)
-    jpath = out / f"{model}.json"
-    jpath.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
-    mpath = out / f"{model}.md"
-    mpath.write_text(markdown_table(payload))
-    return jpath, mpath
-
-
-def stub_eval_fn(scale: float = 2.0):
-    """Deterministic accuracy stub from the fidelity proxy.
-
-    Maps the mean selected rel-L2 of a candidate plan to a pseudo
-    top-1 in [0, 1] — monotone in fidelity, cheap, and a pure function
-    of the plan, so smoke reports are byte-identical across re-runs.
-    """
-
-    def eval_fn(result) -> float:
-        score = float(np.mean([lc.score for lc in result.layers.values()]))
-        return round(max(0.0, 1.0 - scale * score), 6)
-
-    return eval_fn
-
-
-def smoke_calibration(seed: int = 0):
-    """A tiny 2-layer synthetic model calibrated on the smoke grid."""
-    rng = np.random.default_rng(seed)
-    weights = {
-        "l1": jnp.asarray(rng.normal(size=(32, 8)) * 0.1, jnp.float32),
-        "l2": jnp.asarray(rng.normal(size=(16, 8)) * 0.1, jnp.float32),
-    }
-    acts = {
-        k: jnp.asarray(
-            np.maximum(rng.normal(size=(32, w.shape[0])), 0), jnp.float32
-        )
-        for k, w in weights.items()
-    }
-    return cal.calibrate(
-        default_pipeline(), weights, acts, SMOKE_GRID,
-        n_noise_keys=2, seed=seed,
-    )
 
 
 def main(quick: bool = True, smoke: bool = False, out_dir=None) -> None:
     from benchmarks.common import emit
 
     if smoke:
-        result = smoke_calibration()
-        eval_fn = stub_eval_fn()
-        refined = cal.refine(result, eval_fn, budget=4, tol=0.05)
-        points = refined.pareto(eval_fn=eval_fn)
-        jpath, _ = write_report("smoke2", refined, points, out_dir)
+        config = load_config(SMOKE_CONFIG).override(
+            out_dir=str(pathlib.Path(out_dir or OUT_DIR).resolve())
+        )
+        sweep_runner.run(config)
+        jpath, _ = sweep_analysis.analyze(config)
+        # The refined calibration backing the sweep's grid points
+        # (memoized in-process by the measure setup, so no recompute).
+        seed_result, refined, _ = sweep_measures._pareto_setup(config)
+        points = sweep_runner.read_points(config)
         emit("pareto_smoke_points", 0.0, f"n={len(points)}")
         emit(
             "pareto_smoke_refine", 0.0,
             f"topsw={refined.effective_tops_per_w():.2f},"
-            f"seed_topsw={result.effective_tops_per_w():.2f},"
+            f"seed_topsw={seed_result.effective_tops_per_w():.2f},"
             f"evals={refined.refinement.evals_used}",
         )
-        frontier = [p for p in points if p.frontier]
+        import json
+
+        payload = json.loads(jpath.read_text())
+        frontier = [p for p in payload["points"] if p["frontier"]]
         assert frontier, "empty pareto frontier"
         assert (refined.effective_tops_per_w()
-                >= result.effective_tops_per_w() - 1e-9), \
+                >= seed_result.effective_tops_per_w() - 1e-9), \
             "refinement regressed TOPS/W"
         print(f"# wrote {jpath}")
         return
+
+    import jax
+    import jax.numpy as jnp
 
     from benchmarks.common import RESNET_CFG, cim_policy, \
         train_resnet_baseline
@@ -192,7 +109,8 @@ def main(quick: bool = True, smoke: bool = False, out_dir=None) -> None:
     refined = cal.refine(result, eval_fn, budget=4 if quick else 12,
                          tol=0.01)
     points = refined.pareto(eval_fn=eval_fn)
-    jpath, mpath = write_report("resnet", refined, points, out_dir)
+    jpath, mpath = write_report("resnet", refined, points,
+                                out_dir or OUT_DIR)
     r = refined.refinement
     emit(
         "pareto_resnet_refine", 0.0,

@@ -54,6 +54,14 @@ def main() -> None:
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
     names = args.only.split(",") if args.only else list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        print(
+            f"error: unknown benchmark(s) {unknown}; "
+            f"registered: {','.join(sorted(ALL))}",
+            file=sys.stderr, flush=True,
+        )
+        sys.exit(2)
     quick = not args.full
     failed = []
     for name in names:

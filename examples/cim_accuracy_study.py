@@ -10,18 +10,19 @@ operating point.
 import argparse
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (
     RESNET_CFG, cim_policy, evaluate, train_resnet_baseline,
 )
-from benchmarks.pareto import markdown_table, report_dict, write_report
 from repro.configs.base import CIMPolicy
 from repro.core import calibrate_resnet
-from repro.core.calibrate import (
-    CalibrationGrid, refine, resnet_eval_fn,
-)
+from repro.core.calibrate import CalibrationGrid
+from repro.sweep import analyze, load_config
+from repro.sweep import runner as sweep_runner
+from repro.sweep.config import REPO_ROOT
+
+SWEEP_CONFIGS = REPO_ROOT / "configs" / "sweeps"
 
 
 def main():
@@ -49,15 +50,30 @@ def main():
         print(f"  {tag}" + "  ".join(row))
 
     print("\n=== rows x ADC bits @ cutoff 0.5, HW errors (Fig. 7b) ===")
+    # The same table as a declarative sweep: the committed config
+    # expands to the rows x bits grid, runs resumably (append-only
+    # points.jsonl; re-running the example skips completed points) and
+    # the analysis pass renders the summary table.
+    # Overriding a param changes the config hash (a different study),
+    # so the non-default profile gets its own results dir.
+    fig7b = load_config(SWEEP_CONFIGS / "accuracy_study.json")
+    if n_images != fig7b.params["n_images"]:
+        fig7b = fig7b.override(
+            params={"n_images": n_images},
+            out_dir=f"results/sweeps/accuracy_study_n{n_images}",
+        )
+    sweep_runner.run(fig7b)
+    for path in analyze(fig7b):
+        print(f"  wrote {path}")
+    recs = sorted(sweep_runner.read_points(fig7b).values(),
+                  key=lambda r: r["index"])
     for rows in (4, 8, 16):
-        row = []
-        for bits in (3, 4, 5):
-            acc = evaluate(
-                params, bn, ds,
-                cim_policy(rows=rows, adc_bits=bits, noisy=True),
-                n_images=n_images)
-            row.append(f"{bits}b: {acc:.3f}")
-        print(f"  {rows:2d} rows  " + "  ".join(row))
+        cells = [
+            f"{r['point']['adc_bits']}b: {r['result']['accuracy']:.3f}"
+            for r in recs
+            if r["status"] == "ok" and r["point"]["rows_active"] == rows
+        ]
+        print(f"  {rows:2d} rows  " + "  ".join(cells))
 
     print("\n=== the paper's operating point (Table I) ===")
     for rows in (8, 16):
@@ -107,35 +123,23 @@ def main():
           f"(drop {fp-acc_v:+.3f})")
 
     print("\n=== accuracy-driven refinement + variants x vdd pareto ===")
-    # Phase two of the co-design: re-sweep with cutoff/vdd axes (cost
-    # becomes J/op via the energy model), then greedily refine against
-    # REAL held-out top-1 accuracy — each candidate eval is a full
-    # forward through engine.execute / kernels.dispatch — and report
-    # the per-model accuracy-vs-TOPS/W frontier across variants x vdd.
-    vdd_grid = CalibrationGrid(
-        variants=("p8t", "adder-tree", "cell-adc"),
-        rows_active=(16,) if args.fast else (8, 16),
-        coarse_bits=(1,),
-        vdd=(0.6, 0.9, 1.2),
-    )
-    eres = calibrate_resnet(params, bn, images, rcfg, grid=vdd_grid,
-                            max_samples=128 if args.fast else 256)
-    # Each candidate eval is an eager end-to-end forward over the
-    # held-out batch; evals are memoized per supply-stripped plan, so
-    # the budget bounds the wall time directly.
-    held = ds.batch(32 if args.fast else 64, step=7, train=False)
-    eval_fn = resnet_eval_fn(
-        params, bn, jnp.asarray(held["image"]), held["label"], rcfg,
-        key=jax.random.PRNGKey(1),
-    )
-    refined = refine(eres, eval_fn, budget=4 if args.fast else 12,
-                     tol=0.01)
-    print(refined.summary())
-    print(f"effective TOPS/W: seed {eres.effective_tops_per_w():.2f} "
-          f"-> refined {refined.effective_tops_per_w():.2f}")
-    points = refined.pareto(eval_fn=eval_fn)
-    jpath, mpath = write_report("resnet_study", refined, points)
-    print(markdown_table(report_dict("resnet_study", refined, points)))
+    # Phase two of the co-design, as the committed sweep config: the
+    # measure re-sweeps with the vdd axis (cost becomes J/op via the
+    # energy model), greedily refines against REAL held-out top-1
+    # accuracy — each candidate eval is a full forward through
+    # engine.execute / kernels.dispatch — and each grid point is one
+    # (variant, vdd) projection of the refined plan. The analysis pass
+    # renders the per-model accuracy-vs-TOPS/W frontier.
+    study = load_config(SWEEP_CONFIGS / "resnet_study.json")
+    if not args.fast:
+        study = study.override(
+            params={"rows_active": [8, 16], "budget": 12,
+                    "max_samples": 256, "n_cal": 256, "n_held": 64},
+            out_dir="results/sweeps/resnet_study_full",
+        )
+    sweep_runner.run(study)
+    jpath, mpath = analyze(study)
+    print(mpath.read_text())
     print(f"(written to {jpath} and {mpath})")
 
     print("\nExpected orderings (the paper's claims): accuracy falls "

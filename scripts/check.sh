@@ -34,5 +34,21 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
 # cutoff/vdd sweep axes, the energy cost model, greedy refinement and
 # the byte-deterministic report writer; the full resnet refinement
 # lives under `pytest -m slow`, keeping tier-1 inside TIER1_BUDGET_S.
+# (Since PR 6 this routes through the repro.sweep harness + the
+# committed configs/sweeps/pareto_smoke.json config.)
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/pareto.py --smoke
+# Sweep-harness smoke: the tiny committed config end to end — dry-run
+# feasibility validation, a 2-point resumable run into a throwaway
+# dir, and the analysis pass rendering the versioned pareto report.
+sweep_tmp="$(mktemp -d)"
+trap 'rm -rf "${sweep_tmp}"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.sweep configs/sweeps/ci_smoke.json --dry-run \
+    --out "${sweep_tmp}"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.sweep configs/sweeps/ci_smoke.json \
+    --out "${sweep_tmp}"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.sweep configs/sweeps/ci_smoke.json --analyze \
+    --out "${sweep_tmp}"

@@ -48,7 +48,7 @@ import json
 import logging
 import pathlib
 import warnings
-from typing import Any, Callable, Mapping
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -728,6 +728,48 @@ class CalibrationResult:
         layers[name] = new_lc
         return dataclasses.replace(self, layers=layers, refinement=None)
 
+    def project(
+        self, variant: str, vdd: float | None = None
+    ) -> "CalibrationResult | None":
+        """This result re-selected under one (variant, vdd) pin.
+
+        Re-runs the cheapest-within-slack selection over the recorded
+        per-layer sweep tables *restricted to* ``variant`` (slack
+        relative to the variant's own per-layer floor), and — when
+        ``vdd`` is given — pins every selected spec to that supply
+        point with the cost recomputed there (for ``fJ/MAC`` results;
+        bare ``cmp-evals/MAC`` costs are supply-invariant). Returns
+        ``None`` when some layer has no scored point for the variant.
+
+        One grid point of the variants x vdd pareto study:
+        :meth:`pareto` calls this per combination, and the
+        ``repro.sweep`` harness calls it per grid point.
+        """
+        if vdd is not None:
+            energy.validate_vdd(vdd, what="vdd axis point")
+        if self.layers and not any(lc.table for lc in self.layers.values()):
+            raise ValueError(
+                "result has no sweep tables (loaded via load_result?); "
+                "re-run calibrate() — projection re-selects per variant "
+                "from the per-layer grid tables, which are not persisted"
+            )
+        forced: dict[str, PointResult] = {}
+        for name, lc in self.layers.items():
+            rows = [p for p in lc.table if p.variant == variant]
+            if not rows:
+                return None
+            forced[name] = _select(rows, self.slack)
+        layers = {}
+        for name, p in forced.items():
+            spec_v = p.spec if vdd is None else p.spec.replace(vdd=vdd)
+            cost = (energy.op_energy_j(spec_v, variant) * 1e15
+                    if self.cost_unit == "fJ/MAC" else p.cost)
+            layers[name] = dataclasses.replace(
+                self.layers[name], spec=spec_v,
+                score=p.score, cost=cost, variant=variant,
+            )
+        return dataclasses.replace(self, layers=layers, refinement=None)
+
     def pareto(
         self,
         *,
@@ -771,48 +813,46 @@ class CalibrationResult:
         ev = None if eval_fn is None else _memoized_eval(eval_fn)
         raw: list[tuple[str, float, float, float, float | None]] = []
         for vname in vlist:
-            forced: dict[str, PointResult] = {}
-            for name, lc in self.layers.items():
-                rows = [p for p in lc.table if p.variant == vname]
-                if not rows:
-                    break
-                forced[name] = _select(rows, self.slack)
-            else:
-                for v in vddlist:
-                    layers = {}
-                    for name, p in forced.items():
-                        spec_v = p.spec.replace(vdd=v)
-                        cost = (energy.op_energy_j(spec_v, vname) * 1e15
-                                if self.cost_unit == "fJ/MAC" else p.cost)
-                        layers[name] = dataclasses.replace(
-                            self.layers[name], spec=spec_v,
-                            score=p.score, cost=cost, variant=vname,
-                        )
-                    res_v = dataclasses.replace(
-                        self, layers=layers, refinement=None
-                    )
-                    score = float(np.mean(
-                        [p.score for p in forced.values()]
-                    ))
-                    acc = None if ev is None else ev(res_v)
-                    raw.append((vname, float(v),
-                                res_v.effective_tops_per_w(), score, acc))
+            for v in vddlist:
+                res_v = self.project(vname, vdd=float(v))
+                if res_v is None:
+                    break  # no scored point for this variant anywhere
+                score = float(np.mean(
+                    [lc.score for lc in res_v.layers.values()]
+                ))
+                acc = None if ev is None else ev(res_v)
+                raw.append((vname, float(v),
+                            res_v.effective_tops_per_w(), score, acc))
+        return mark_frontier(raw)
 
-        def metric(t):
-            return t[4] if t[4] is not None else -t[3]
 
-        out = []
-        for t in raw:
-            dominated = any(
-                metric(q) >= metric(t) and q[2] >= t[2]
-                and (metric(q) > metric(t) or q[2] > t[2])
-                for q in raw
-            )
-            out.append(ParetoPoint(
-                variant=t[0], vdd=t[1], tops_per_w=t[2], score=t[3],
-                accuracy=t[4], frontier=not dominated,
-            ))
-        return tuple(sorted(out, key=lambda p: (p.variant, p.vdd)))
+def mark_frontier(
+    raw: "Sequence[tuple[str, float, float, float, float | None]]",
+) -> tuple["ParetoPoint", ...]:
+    """Flag the non-dominated (accuracy-vs-TOPS/W) points.
+
+    ``raw`` rows are (variant, vdd, tops_per_w, score, accuracy); the
+    accuracy axis uses held-out top-1 when present, else the negated
+    fidelity proxy (lower rel-L2 = better). Shared by
+    :meth:`CalibrationResult.pareto` and the sweep analysis pass, so a
+    study run through either path draws the same frontier.
+    """
+
+    def metric(t):
+        return t[4] if t[4] is not None else -t[3]
+
+    out = []
+    for t in raw:
+        dominated = any(
+            metric(q) >= metric(t) and q[2] >= t[2]
+            and (metric(q) > metric(t) or q[2] > t[2])
+            for q in raw
+        )
+        out.append(ParetoPoint(
+            variant=t[0], vdd=t[1], tops_per_w=t[2], score=t[3],
+            accuracy=t[4], frontier=not dominated,
+        ))
+    return tuple(sorted(out, key=lambda p: (p.variant, p.vdd)))
 
 
 def _plan_key(result: CalibrationResult) -> tuple:

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import pathlib
 import time
@@ -53,6 +54,8 @@ from repro.core.pipeline import MacroSpec, as_spec
 from repro.kernels import dispatch
 
 CACHE_VERSION = 1
+
+logger = logging.getLogger(__name__)
 
 # Pallas tiling candidates swept per shape (bk is clamped to a multiple
 # of rows_active by the dispatch adapter).
@@ -185,19 +188,31 @@ def active_cache() -> TuningCache | None:
 
     The file is an optional *hint*: a stale-version or corrupt cache
     must degrade to the dispatch heuristics (with a one-time warning),
-    never brick serving. Explicit ``TuningCache.load`` calls keep
-    their strict errors.
+    never brick serving — and a cache that was simply never written
+    for this arch (only ``cpu.json`` ships today) degrades the same
+    way, with a one-time log line naming the missing file. Explicit
+    ``TuningCache.load`` calls keep their strict errors.
     """
     global _active, _loaded
     if not _loaded:
+        arch = jax.default_backend()
         try:
             _active = TuningCache.load()
+            if _active is None:
+                logger.info(
+                    "no tuning cache for arch '%s' (%s missing): "
+                    "kernel dispatch falls back to the deterministic "
+                    "heuristics; run kernels.autotune.autotune (or a "
+                    "configs/sweeps/autotune_*.json sweep) to pin "
+                    "measured winners",
+                    arch, cache_path(arch),
+                )
         except Exception as e:  # noqa: BLE001 - degrade, don't brick
             import warnings
 
             warnings.warn(
                 f"ignoring unreadable tuning cache "
-                f"({cache_path(jax.default_backend())}): {e}; "
+                f"({cache_path(arch)}): {e}; "
                 "re-run kernels.autotune.autotune to regenerate",
                 stacklevel=2,
             )
@@ -231,6 +246,28 @@ def lookup(variant: str, cell: tuple[int, int, int]) -> Winner | None:
 # ---------------------------------------------------------------------------
 # Sweeping
 # ---------------------------------------------------------------------------
+
+
+def cache_from_records(
+    arch: str, records: Iterable[Mapping]
+) -> TuningCache:
+    """A TuningCache from measured-winner records (the sweep harness).
+
+    Each record carries ``variant``, ``cell`` ([m, k, n] tuning cell),
+    ``backend``, ``block`` and ``us``. Later records win a shared
+    cell, matching :func:`autotune`'s last-sweep-wins merge.
+    """
+    cache = TuningCache(arch=arch)
+    for r in records:
+        cache.put(
+            r["variant"], tuple(int(d) for d in r["cell"]),
+            Winner(
+                backend=r["backend"],
+                block=tuple(r["block"]) if r.get("block") else None,
+                us=float(r.get("us", 0.0)),
+            ),
+        )
+    return cache
 
 
 def default_candidates(

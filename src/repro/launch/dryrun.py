@@ -412,6 +412,39 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
 # ---------------------------------------------------------------------------
 
 
+def validate_cell(
+    arch: str | None, shape_name: str | None = None
+) -> dict:
+    """Name + analytic feasibility of one launch cell, no compile.
+
+    The ``repro.sweep --dry-run`` hook: checks the arch/shape names
+    against the registries and evaluates the analytic cost model
+    (param counts, :func:`model_flops`) — everything :func:`run_cell`
+    would record that doesn't require lowering or compiling. Raises
+    ``ValueError`` with the known names on an unknown arch/shape.
+    """
+    if arch is not None and arch not in ARCH_IDS:
+        raise ValueError(
+            f"unknown arch {arch!r}; known: {sorted(ARCH_IDS)}"
+        )
+    if shape_name is not None and shape_name not in SHAPES:
+        raise ValueError(
+            f"unknown shape {shape_name!r}; known: {sorted(SHAPES)}"
+        )
+    if arch is None or shape_name is None:
+        return {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "n_params": cfg.param_count(),
+        "n_params_active": cfg.active_param_count(),
+        "model_flops": model_flops(cfg, shape),
+    }
+
+
 def run_cell(
     arch: str,
     shape_name: str,

@@ -1,0 +1,35 @@
+"""repro.sweep — config-driven, resumable experiment sweeps.
+
+The declarative harness the repo's studies run through: a JSON/py
+config names a measure, grid axes and an output dir; the planner
+expands it into stable-ID grid points; the runner executes them
+resumably (append-only ``points.jsonl``, completed points skipped on
+restart, optional process parallelism) and the analysis pass renders
+the log into pareto/summary/tuning-cache reports. See ``docs/sweeps.md``
+and ``configs/sweeps/`` for the committed study configs.
+
+Layering: ``config``/``plan`` are import-light (no jax); measures
+import their dependencies lazily at execution time.
+"""
+
+from repro.sweep.analysis import analyze
+from repro.sweep.config import SWEEP_VERSION, SweepConfig, load_config
+from repro.sweep.measures import Measure, SkipPoint
+from repro.sweep.plan import GridPoint, expand, validate_point
+from repro.sweep.runner import RunReport, dry_run, read_points, run
+
+__all__ = [
+    "SWEEP_VERSION",
+    "SweepConfig",
+    "load_config",
+    "GridPoint",
+    "expand",
+    "validate_point",
+    "Measure",
+    "SkipPoint",
+    "RunReport",
+    "dry_run",
+    "read_points",
+    "run",
+    "analyze",
+]

@@ -1,0 +1,429 @@
+"""The measure registry: what a sweep executes at each grid point.
+
+A *measure* is a function ``(config, point) -> dict`` returning the
+JSON record for one grid point (the runner stamps identity fields and
+appends it to ``points.jsonl``). Configs name measures either by
+registry name (the built-ins below) or as a ``module:attr`` path to
+any callable — so a new study is a function plus a JSON file, not a
+new script.
+
+Conventions:
+
+* Raise :class:`SkipPoint` for a point that is infeasible at run time;
+  the runner records ``status="skipped"`` with the reason (the same
+  shape ``--dry-run`` pre-records). Any other exception aborts.
+* Heavy setup (training a baseline, running a calibration sweep) is
+  memoized per process keyed on the config, so grid points share it —
+  including inside each worker of a ``--jobs N`` run.
+* Records must be deterministic for resume byte-identity: round
+  floats, no timestamps. (Exception: timing measures like
+  ``autotune`` are deterministic only given a deterministic clock;
+  their resume semantics still hold — completed points are never
+  re-timed.)
+
+Built-ins::
+
+    grid-echo    pure echo of the point (CI / harness tests; no jax)
+    pareto       (variant, vdd) -> TOPS/W + accuracy via
+                 CalibrationResult.project; params.setup picks the
+                 "smoke" 2-layer synthetic or the "resnet" study
+    cim-accuracy ResNet top-1 at one (rows_active, adc_bits, cutoff,
+                 noisy) CIM operating point (the Fig. 7 axes)
+    autotune     kernels.autotune.sweep_shape winner per
+                 (variant, shape) — renders back to the tuning cache
+                 via the "autotune" analysis
+    dryrun-cell  launch.dryrun.run_cell compile record per
+                 (arch, shape)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from typing import Any, Callable, Mapping
+
+from repro.sweep.config import REPO_ROOT, SweepConfig
+from repro.sweep.plan import GridPoint
+
+
+class SkipPoint(Exception):
+    """Raised by a measure for a run-time-infeasible point."""
+
+
+MeasureFn = Callable[[SweepConfig, GridPoint], Mapping[str, Any]]
+ValidateFn = Callable[[SweepConfig, GridPoint], "str | None"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Measure:
+    name: str
+    fn: MeasureFn
+    # Extra dry-run validation beyond plan.validate_point (axis
+    # presence, shape well-formedness); returns a reason or None.
+    validate: ValidateFn | None = None
+
+
+_REGISTRY: dict[str, Measure] = {}
+
+
+def register(
+    name: str, fn: MeasureFn, *, validate: ValidateFn | None = None
+) -> Measure:
+    m = Measure(name=name, fn=fn, validate=validate)
+    _REGISTRY[name] = m
+    return m
+
+
+def registered() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(name: str) -> Measure:
+    """A registered measure, or an imported ``module:attr`` callable."""
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if ":" in name:
+        import importlib
+
+        mod_name, attr = name.split(":", 1)
+        try:
+            obj = getattr(importlib.import_module(mod_name), attr)
+        except (ImportError, AttributeError) as e:
+            raise ValueError(f"cannot import measure {name!r}: {e}") from None
+        if isinstance(obj, Measure):
+            return obj
+        if callable(obj):
+            return Measure(name=name, fn=obj)
+        raise ValueError(f"measure {name!r} is not callable")
+    raise ValueError(
+        f"unknown measure {name!r}; registered: {list(registered())} "
+        f"(or use a 'module:attr' import path)"
+    )
+
+
+def _round(x, nd: int = 6):
+    return None if x is None else round(float(x), nd)
+
+
+def _params_key(config: SweepConfig) -> str:
+    """Cache key for per-process setup: params + the axes it reads."""
+    return json.dumps(
+        {"params": config.canonical()["params"],
+         "axes": config.canonical()["axes"]},
+        sort_keys=True, separators=(",", ":"),
+    )
+
+
+def _bootstrap_benchmarks() -> None:
+    """Make ``benchmarks.*`` importable from any worker cwd."""
+    root = str(REPO_ROOT)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+
+
+# ---------------------------------------------------------------------------
+# grid-echo — pure, instant; what the harness tests and CI dry paths use
+# ---------------------------------------------------------------------------
+
+
+def _grid_echo(config: SweepConfig, point: GridPoint) -> dict:
+    # A stable pseudo-metric derived from the point identity, so the
+    # analysis pass has a numeric column to summarise.
+    value = int(point.point_id[:8], 16) / float(16 ** 8)
+    return {"echo": point.canonical(), "value": round(value, 6)}
+
+
+register("grid-echo", _grid_echo)
+
+
+# ---------------------------------------------------------------------------
+# pareto — (variant, vdd) grid points through CalibrationResult.project
+# ---------------------------------------------------------------------------
+
+# The tiny synthetic calibration grid the smoke pareto study sweeps
+# (benchmarks/pareto.py re-exports this as its SMOKE_GRID).
+SMOKE_GRID_KW = dict(
+    adc_bits=(3, 4),
+    rows_active=(8, 16),
+    coarse_bits=(1,),
+    cutoff=(0.5,),
+)
+
+
+def stub_eval_fn(scale: float = 2.0):
+    """Deterministic accuracy stub from the fidelity proxy.
+
+    Maps the mean selected rel-L2 of a candidate plan to a pseudo
+    top-1 in [0, 1] — monotone in fidelity, cheap, and a pure function
+    of the plan, so smoke reports are byte-identical across re-runs.
+    """
+    import numpy as np
+
+    def eval_fn(result) -> float:
+        score = float(np.mean([lc.score for lc in result.layers.values()]))
+        return round(max(0.0, 1.0 - scale * score), 6)
+
+    return eval_fn
+
+
+def smoke_calibration(
+    seed: int = 0,
+    *,
+    variants=("p8t", "adder-tree", "cell-adc"),
+    vdd=(0.6, 0.9),
+):
+    """A tiny 2-layer synthetic model calibrated on the smoke grid."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import calibrate as cal
+    from repro.core.calibrate import CalibrationGrid
+    from repro.core.pipeline import default_pipeline
+
+    rng = np.random.default_rng(seed)
+    weights = {
+        "l1": jnp.asarray(rng.normal(size=(32, 8)) * 0.1, jnp.float32),
+        "l2": jnp.asarray(rng.normal(size=(16, 8)) * 0.1, jnp.float32),
+    }
+    acts = {
+        k: jnp.asarray(
+            np.maximum(rng.normal(size=(32, w.shape[0])), 0), jnp.float32
+        )
+        for k, w in weights.items()
+    }
+    grid = CalibrationGrid(
+        variants=tuple(variants), vdd=tuple(vdd), **SMOKE_GRID_KW
+    )
+    return cal.calibrate(
+        default_pipeline(), weights, acts, grid,
+        n_noise_keys=2, seed=seed,
+    )
+
+
+_PARETO_SETUP: dict[str, tuple] = {}
+
+
+def _pareto_setup(config: SweepConfig):
+    """(seed_result, refined_result, eval_fn), memoized per process."""
+    key = _params_key(config)
+    if key in _PARETO_SETUP:
+        return _PARETO_SETUP[key]
+
+    from repro.core import calibrate as cal
+
+    p = dict(config.params)
+    setup = p.get("setup", "smoke")
+    variants = tuple(config.axes.get("variant", ("p8t",)))
+    vdds = tuple(float(v) for v in config.axes.get("vdd", (0.9,)))
+    budget = int(p.get("budget", 0))
+
+    if setup == "smoke":
+        result = smoke_calibration(
+            int(p.get("seed", 0)), variants=variants, vdd=vdds
+        )
+        eval_fn = stub_eval_fn(float(p.get("scale", 2.0)))
+        refined = (
+            cal.refine(result, eval_fn, budget,
+                       tol=float(p.get("tol", 0.05)))
+            if budget else result
+        )
+    elif setup == "resnet":
+        import dataclasses as dc
+
+        import jax
+        import jax.numpy as jnp
+
+        _bootstrap_benchmarks()
+        from benchmarks.common import (
+            RESNET_CFG, cim_policy, train_resnet_baseline,
+        )
+
+        params, bn, ds = train_resnet_baseline()
+        rcfg = dc.replace(RESNET_CFG, cim=cim_policy(noisy=True))
+        n_cal = int(p.get("n_cal", 64))
+        images = jnp.asarray(
+            ds.batch(n_cal, step=0, train=False)["image"]
+        )
+        grid = cal.CalibrationGrid(
+            adc_bits=tuple(p.get("adc_bits", (3, 4, 5))),
+            rows_active=tuple(p.get("rows_active", (16,))),
+            coarse_bits=tuple(p.get("coarse_bits", (1,))),
+            variants=variants,
+            vdd=vdds,
+        )
+        result = cal.calibrate_resnet(
+            params, bn, images, rcfg, grid=grid,
+            max_samples=int(p.get("max_samples", 64)),
+        )
+        held = ds.batch(int(p.get("n_held", 16)), step=7, train=False)
+        eval_fn = cal.resnet_eval_fn(
+            params, bn, jnp.asarray(held["image"]), held["label"], rcfg,
+            key=jax.random.PRNGKey(int(p.get("eval_seed", 1))),
+        )
+        refined = (
+            cal.refine(result, eval_fn, budget,
+                       tol=float(p.get("tol", 0.01)))
+            if budget else result
+        )
+    else:
+        raise ValueError(
+            f"{config.name}: unknown pareto setup {setup!r} "
+            f"(expected 'smoke' or 'resnet')"
+        )
+    out = (result, refined, cal._memoized_eval(eval_fn))
+    _PARETO_SETUP[key] = out
+    return out
+
+
+def _pareto_point(config: SweepConfig, point: GridPoint) -> dict:
+    import dataclasses as dc
+
+    import numpy as np
+
+    _, refined, ev = _pareto_setup(config)
+    variant = point.values["variant"]
+    vdd = float(point.values["vdd"])
+    proj = refined.project(variant, vdd=vdd)
+    if proj is None:
+        raise SkipPoint(
+            f"variant {variant!r} has no scored point for some layer"
+        )
+    score = float(np.mean([lc.score for lc in proj.layers.values()]))
+    grid = dc.asdict(refined.grid)
+    return {
+        "variant": variant,
+        "vdd": _round(vdd),
+        "tops_per_w": _round(proj.effective_tops_per_w(), 4),
+        "score": _round(score),
+        "accuracy": _round(ev(proj)),
+        "cost_unit": proj.cost_unit,
+        "slack": _round(proj.slack),
+        "grid": {k: list(v) for k, v in sorted(grid.items())},
+    }
+
+
+def _pareto_validate(config: SweepConfig, point: GridPoint) -> str | None:
+    missing = [a for a in ("variant", "vdd") if a not in point.values]
+    if missing:
+        return f"pareto measure needs axes {missing} (got " \
+               f"{sorted(point.values)})"
+    return None
+
+
+register("pareto", _pareto_point, validate=_pareto_validate)
+
+
+# ---------------------------------------------------------------------------
+# cim-accuracy — ResNet top-1 per CIM operating point (Fig. 7 axes)
+# ---------------------------------------------------------------------------
+
+_RESNET_BASELINE: dict[str, tuple] = {}
+
+
+def _resnet_baseline():
+    if "b" not in _RESNET_BASELINE:
+        _bootstrap_benchmarks()
+        from benchmarks.common import train_resnet_baseline
+
+        _RESNET_BASELINE["b"] = train_resnet_baseline()
+    return _RESNET_BASELINE["b"]
+
+
+def _cim_accuracy(config: SweepConfig, point: GridPoint) -> dict:
+    _bootstrap_benchmarks()
+    from benchmarks.common import cim_policy, evaluate
+
+    params, bn, ds = _resnet_baseline()
+    v = point.values
+    p = dict(config.params)
+    rows = int(v.get("rows_active", 16))
+    bits = int(v.get("adc_bits", 4))
+    cutoff = float(v.get("cutoff", 0.5))
+    noisy = bool(v.get("noisy", True))
+    pol = cim_policy(rows=rows, adc_bits=bits, cutoff=cutoff, noisy=noisy)
+    acc = evaluate(
+        params, bn, ds, pol, n_images=int(p.get("n_images", 128))
+    )
+    return {
+        "rows_active": rows,
+        "adc_bits": bits,
+        "cutoff": _round(cutoff),
+        "noisy": noisy,
+        "accuracy": _round(acc),
+    }
+
+
+register("cim-accuracy", _cim_accuracy)
+
+
+# ---------------------------------------------------------------------------
+# autotune — kernel-winner timing per (variant, shape)
+# ---------------------------------------------------------------------------
+
+
+def _autotune_point(config: SweepConfig, point: GridPoint) -> dict:
+    from repro.kernels import autotune, dispatch
+
+    variant = point.values["variant"]
+    m, k, n = (int(d) for d in point.values["shape"])
+    p = dict(config.params)
+    try:
+        w = autotune.sweep_shape(
+            variant, None, m, k, n,
+            reps=int(p.get("reps", 3)), seed=int(p.get("seed", 0)),
+        )
+    except RuntimeError as e:  # no feasible candidate at this shape
+        raise SkipPoint(str(e)) from None
+    cell = dispatch.shape_cell(m, k, n)
+    return {
+        "variant": variant,
+        "shape": [m, k, n],
+        "cell": list(cell),
+        "backend": w.backend,
+        "block": list(w.block) if w.block else None,
+        "us": round(float(w.us), 3),
+    }
+
+
+def _autotune_validate(config: SweepConfig, point: GridPoint) -> str | None:
+    if "shape" not in point.values or "variant" not in point.values:
+        return "autotune measure needs 'variant' and 'shape' axes"
+    shape = point.values["shape"]
+    if (not isinstance(shape, (list, tuple)) or len(shape) != 3
+            or any(int(d) <= 0 for d in shape)):
+        return f"shape must be [m, k, n] of positive ints, got {shape!r}"
+    return None
+
+
+register("autotune", _autotune_point, validate=_autotune_validate)
+
+
+# ---------------------------------------------------------------------------
+# dryrun-cell — compile-only launch cells per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+def _dryrun_cell(config: SweepConfig, point: GridPoint) -> dict:
+    from repro.launch import dryrun
+
+    p = dict(config.params)
+    rec = dryrun.run_cell(
+        point.values["arch"], point.values["shape"],
+        multi_pod=p.get("mesh", "single") == "multi",
+        do_probe=bool(p.get("probe", False)),
+    )
+    # Wall/compile times and tracebacks are non-deterministic; the
+    # deliverable is the compile/memory/collective record.
+    for key in ("wall_s", "lower_s", "compile_s", "traceback"):
+        rec.pop(key, None)
+    return rec
+
+
+def _dryrun_validate(config: SweepConfig, point: GridPoint) -> str | None:
+    if "arch" not in point.values or "shape" not in point.values:
+        return "dryrun-cell measure needs 'arch' and 'shape' axes"
+    return None
+
+
+register("dryrun-cell", _dryrun_cell, validate=_dryrun_validate)

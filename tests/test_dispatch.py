@@ -14,6 +14,7 @@ Covers the PR-4 tentpole end to end:
 
 import dataclasses
 import json
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -341,6 +342,33 @@ class TestAutotune:
         path.write_text(json.dumps({"version": 99, "entries": {}}))
         with pytest.raises(ValueError, match="version"):
             autotune.TuningCache.load(path=path)
+
+    def test_missing_cache_heuristic_fallback_one_time_log(
+        self, tmp_path, monkeypatch, caplog
+    ):
+        """No results/autotune/<arch>.json: dispatch degrades to the
+        deterministic heuristics with exactly one log line naming the
+        missing file (never re-logged, never an error)."""
+        monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+        with caplog.at_level(logging.INFO,
+                             logger="repro.kernels.autotune"):
+            assert autotune.reload_active() is None
+            assert autotune.active_cache() is None  # cached; no re-log
+            assert autotune.lookup(
+                "p8t", dispatch.shape_cell(4, 64, 8)) is None
+        msgs = [r.getMessage() for r in caplog.records
+                if "no tuning cache" in r.getMessage()]
+        assert len(msgs) == 1, msgs
+        assert str(tmp_path) in msgs[0]
+        cfg = PAPER_OP_16ROWS
+        x, w = rand_codes(4, 64, 8, cfg)
+        with dispatch.record_resolutions() as log:
+            y = dispatch.dispatch(x, w, cfg)
+        assert log[0].source == "heuristic"
+        np.testing.assert_array_equal(
+            np.asarray(y),
+            np.asarray(matmul.cim_matmul_int(x, w, cfg)),
+        )
 
     def test_infeasible_candidates_skipped(self):
         """A candidate that raises (depth guard etc.) is never a winner."""
