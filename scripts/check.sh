@@ -15,6 +15,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 TIER1_BUDGET_S="${TIER1_BUDGET_S:-600}"
 t0=$(date +%s)
+# Invariant linter first — pure stdlib AST analysis, sub-second, and
+# strict (the committed baseline is empty and stays that way): tracer
+# readbacks, nondeterministic artifact writers, registry-contract
+# drift, silent dispatch fallbacks and donation bugs fail the build
+# before any jax compile spends wall time. See docs/analysis.md.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.analysis src/repro --strict
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 elapsed=$(( $(date +%s) - t0 ))
 echo "tier-1 wall time: ${elapsed}s (budget ${TIER1_BUDGET_S}s)"

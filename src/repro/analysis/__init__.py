@@ -1,0 +1,35 @@
+"""repro.analysis — project-specific AST invariant linter.
+
+Five rule families, each grounded in a bug this repo actually shipped
+or hand-patched (see docs/analysis.md for the catalog):
+
+  CIM101  tracer readback reachable from a traced body
+  CIM201  nondeterministic artifact content
+  CIM301  macro-variant registry contract drift
+  CIM401  silent fallback around backend resolution
+  CIM501  use-after-donation
+
+Run ``python -m repro.analysis`` (see ``cli``); programmatic entry is
+:func:`analyze`. Pure stdlib — importing this package never imports
+jax, so it runs anywhere, fast, including inside CI's lint stage.
+"""
+
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.driver import Report, analyze, find_repo_root
+from repro.analysis.findings import SCHEMA_VERSION, Finding
+from repro.analysis.loader import Project
+from repro.analysis.rules import ALL_RULES, RULE_IDS, rule_catalog
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "Project",
+    "Report",
+    "RULE_IDS",
+    "SCHEMA_VERSION",
+    "analyze",
+    "find_repo_root",
+    "load_baseline",
+    "rule_catalog",
+    "write_baseline",
+]

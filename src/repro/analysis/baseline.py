@@ -1,0 +1,62 @@
+"""Committed baseline of grandfathered findings.
+
+The baseline file is deterministic JSON (sorted keys, sorted entries)
+so regenerating it on an unchanged tree is byte-identical — the same
+contract every artifact writer in this repo follows. An entry matches
+by fingerprint (see ``findings.Finding.fingerprint``): edit the
+offending line and the grandfathering dissolves on its own.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.findings import SCHEMA_VERSION, Finding, sort_key
+
+BASELINE_VERSION = 1
+
+
+class BaselineError(ValueError):
+    pass
+
+
+def load_baseline(path: Path) -> set[str]:
+    """Fingerprints grandfathered by ``path``; empty if it's absent."""
+    if not path.exists():
+        return set()
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise BaselineError(f"unreadable baseline {path}: {e}") from e
+    if payload.get("version") != BASELINE_VERSION:
+        raise BaselineError(
+            f"baseline {path} has version {payload.get('version')!r}; "
+            f"this analyzer writes version {BASELINE_VERSION}"
+        )
+    out = set()
+    for entry in payload.get("findings", []):
+        fp = entry.get("fingerprint")
+        if not isinstance(fp, str):
+            raise BaselineError(f"baseline {path}: entry without fingerprint")
+        out.add(fp)
+    return out
+
+
+def write_baseline(path: Path, found: list[Finding]) -> None:
+    entries = [
+        {
+            "fingerprint": f.fingerprint,
+            "rule": f.rule,
+            "path": f.path,
+            "symbol": f.symbol,
+            "message": f.message,
+        }
+        for f in sorted(found, key=sort_key)
+    ]
+    payload = {
+        "version": BASELINE_VERSION,
+        "schema": SCHEMA_VERSION,
+        "findings": entries,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")

@@ -1,0 +1,141 @@
+"""``python -m repro.analysis`` — the invariant linter CLI.
+
+    python -m repro.analysis [paths...]          # text report, exit 1 on
+                                                 # new findings
+    python -m repro.analysis --format json       # machine-readable
+    python -m repro.analysis --strict            # void the baseline (CI)
+    python -m repro.analysis --write-baseline    # grandfather everything
+    python -m repro.analysis --list-rules        # rule catalog
+
+Defaults: paths = ``src/repro`` under the repo root, baseline =
+``<root>/analysis-baseline.json``, tests dir = ``<root>/tests``.
+Exit codes: 0 clean, 1 new findings, 2 usage/configuration error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import rules as rules_pkg
+from repro.analysis.baseline import BaselineError, write_baseline
+from repro.analysis.driver import analyze, find_repo_root, render_json
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "AST-based invariant linter: tracer safety (CIM101), "
+            "artifact determinism (CIM201), registry contracts "
+            "(CIM301), silent fallbacks (CIM401), donation safety "
+            "(CIM501)."
+        ),
+    )
+    p.add_argument(
+        "paths", nargs="*", type=Path,
+        help="files or directories to analyze (default: src/repro)",
+    )
+    p.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="report format (default: text)",
+    )
+    p.add_argument(
+        "--baseline", type=Path, default=None,
+        help=f"baseline file (default: <root>/{DEFAULT_BASELINE})",
+    )
+    p.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore any baseline file entirely",
+    )
+    p.add_argument(
+        "--write-baseline", action="store_true",
+        help="write all current findings to the baseline and exit 0",
+    )
+    p.add_argument(
+        "--strict", action="store_true",
+        help=(
+            "fail on every finding, baselined or not (CI mode); also "
+            "reports stale baseline entries"
+        ),
+    )
+    p.add_argument(
+        "--tests", type=Path, default=None,
+        help=(
+            "tests directory for the CIM301 test-reference cross-check "
+            "(default: <root>/tests; pass an empty dir to disable)"
+        ),
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    return p
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rid, summary in sorted(rules_pkg.rule_catalog().items()):
+            print(f"{rid}  {summary}")
+        return 0
+
+    if args.paths:
+        paths = args.paths
+    else:
+        root = find_repo_root(Path.cwd())
+        default = root / "src" / "repro"
+        if not default.is_dir():
+            print(
+                "repro.analysis: no paths given and no src/repro under "
+                f"{root}",
+                file=sys.stderr,
+            )
+            return 2
+        paths = [default]
+    for p in paths:
+        if not p.exists():
+            print(f"repro.analysis: no such path: {p}", file=sys.stderr)
+            return 2
+
+    root = find_repo_root(paths[0])
+    baseline_path = args.baseline
+    if baseline_path is None and not args.no_baseline:
+        baseline_path = root / DEFAULT_BASELINE
+    if args.no_baseline:
+        baseline_path = None
+
+    try:
+        report, all_findings = analyze(
+            paths,
+            baseline_path=baseline_path,
+            strict=args.strict,
+            tests_dir=args.tests,
+            root=root,
+        )
+    except BaselineError as e:
+        print(f"repro.analysis: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        target = baseline_path or (root / DEFAULT_BASELINE)
+        write_baseline(target, all_findings)
+        print(
+            f"repro.analysis: wrote {len(all_findings)} finding(s) to "
+            f"{target}"
+        )
+        return 0
+
+    if args.format == "json":
+        sys.stdout.write(render_json(report))
+    else:
+        print(report.render_text())
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

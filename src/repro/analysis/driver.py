@@ -1,0 +1,175 @@
+"""Run the rule set over a source tree and classify the findings.
+
+The driver owns everything the rules don't: path resolution, snippet
+attachment (fingerprints hash the source line), per-line ``# noqa``
+suppression, baseline matching, and the text/JSON renderings the CLI
+exposes. Output ordering is fully deterministic (path, line, col,
+rule) so two runs over the same tree are byte-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.analysis import rules as rules_pkg
+from repro.analysis.baseline import load_baseline
+from repro.analysis.findings import (
+    SCHEMA_VERSION,
+    Finding,
+    is_suppressed,
+    rel_path,
+    sort_key,
+    suppressed_lines,
+    with_snippet,
+)
+from repro.analysis.loader import Project
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]  # reportable (not suppressed, not baselined)
+    suppressed: int
+    baselined: int
+    stale_baseline: int  # baseline entries matching nothing anymore
+    checked_files: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+    def to_json(self) -> dict:
+        return {
+            "version": SCHEMA_VERSION,
+            "rules": rules_pkg.rule_catalog(),
+            "findings": [f.to_dict() for f in self.findings],
+            "counts": {
+                "new": len(self.findings),
+                "suppressed": self.suppressed,
+                "baselined": self.baselined,
+                "stale_baseline": self.stale_baseline,
+                "files": self.checked_files,
+            },
+        }
+
+    def render_text(self) -> str:
+        lines = [f.render() for f in self.findings]
+        lines.append(
+            f"repro.analysis: {len(self.findings)} finding(s), "
+            f"{self.suppressed} suppressed (noqa), "
+            f"{self.baselined} baselined, {self.checked_files} files"
+        )
+        if self.stale_baseline:
+            lines.append(
+                f"note: {self.stale_baseline} stale baseline entr"
+                f"{'y' if self.stale_baseline == 1 else 'ies'} no longer "
+                "match anything — regenerate with --write-baseline"
+            )
+        return "\n".join(lines)
+
+
+def find_repo_root(start: Path) -> Path:
+    cur = start.resolve()
+    if cur.is_file():
+        cur = cur.parent
+    while True:
+        if (cur / "pyproject.toml").exists() or (cur / ".git").exists():
+            return cur
+        if cur.parent == cur:
+            return start.resolve() if start.is_dir() else (
+                start.resolve().parent
+            )
+        cur = cur.parent
+
+
+def analyze(
+    paths: list[Path],
+    *,
+    baseline_path: Path | None = None,
+    strict: bool = False,
+    tests_dir: Path | None = None,
+    root: Path | None = None,
+) -> tuple[Report, list[Finding]]:
+    """Analyze ``paths``; returns (report, all unsuppressed findings).
+
+    The second element ignores the baseline — it is what
+    ``--write-baseline`` persists. ``strict=True`` voids the baseline:
+    every unsuppressed finding counts (CI mode).
+    """
+    root = root or find_repo_root(paths[0])
+    if tests_dir is None:
+        cand = root / "tests"
+        tests_dir = cand if cand.is_dir() else None
+
+    project = Project.load(paths)
+
+    raw: list[Finding] = []
+    for rule in rules_pkg.ALL_RULES:
+        if hasattr(rule, "tests_dir"):
+            rule.tests_dir = tests_dir
+        for f in rule.check(project):
+            mod = project.modules.get(f.symbol)
+            if mod is None:
+                # Longest module-name prefix of the symbol (packages
+                # shadow their submodules otherwise).
+                candidates = [
+                    m for m in project.modules.values()
+                    if f.symbol.startswith(m.name + ".")
+                ]
+                if candidates:
+                    mod = max(candidates, key=lambda m: len(m.name))
+            if mod is None:
+                continue
+            f = dataclasses.replace(
+                f, path=rel_path(mod.path, root)
+            )
+            raw.append(with_snippet(f, mod.lines))
+
+    # Per-file noqa maps (path -> line map), from the already-loaded
+    # sources.
+    noqa_by_path: dict[str, dict] = {}
+    for mod in project.modules.values():
+        noqa_by_path[rel_path(mod.path, root)] = suppressed_lines(
+            mod.lines
+        )
+
+    kept: list[Finding] = []
+    suppressed = 0
+    for f in sorted(raw, key=sort_key):
+        if is_suppressed(f, noqa_by_path.get(f.path, {})):
+            suppressed += 1
+            continue
+        kept.append(f)
+
+    baseline = set()
+    if baseline_path is not None and not strict:
+        baseline = load_baseline(baseline_path)
+    elif baseline_path is not None and strict:
+        # Strict still *reads* the file to report staleness, but no
+        # finding is excused by it.
+        baseline_all = load_baseline(baseline_path)
+        stale = len(baseline_all - {f.fingerprint for f in kept})
+        report = Report(
+            findings=kept,
+            suppressed=suppressed,
+            baselined=0,
+            stale_baseline=stale,
+            checked_files=len(project.modules),
+        )
+        return report, kept
+
+    new = [f for f in kept if f.fingerprint not in baseline]
+    matched = {f.fingerprint for f in kept} & baseline
+    report = Report(
+        findings=new,
+        suppressed=suppressed,
+        baselined=len(matched),
+        stale_baseline=len(baseline - matched),
+        checked_files=len(project.modules),
+    )
+    return report, kept
+
+
+def render_json(report: Report) -> str:
+    return json.dumps(report.to_json(), indent=2, sort_keys=True) + "\n"

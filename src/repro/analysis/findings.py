@@ -1,0 +1,109 @@
+"""Finding record, fingerprints, `# noqa: CIMxxx` suppression.
+
+A finding's *fingerprint* is content-addressed — rule id, repo-relative
+path, enclosing symbol and the normalized source line — so a committed
+baseline survives unrelated line-number drift but invalidates itself
+when the flagged code actually changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import re
+from pathlib import Path
+
+SCHEMA_VERSION = 1
+
+_NOQA_RE = re.compile(
+    r"#\s*noqa(?::\s*(?P<codes>[A-Z]+[0-9]+(?:\s*,\s*[A-Z]+[0-9]+)*))?",
+    re.IGNORECASE,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str  # stable rule id, e.g. "CIM101"
+    path: str  # repo-relative, "/" separators
+    line: int
+    col: int
+    message: str
+    symbol: str = ""  # enclosing function/class qualname, if any
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha256(
+            f"{self.rule}|{self.path}|{self.symbol}|{self.snippet}".encode()
+        )
+        return h.hexdigest()[:16]
+
+    # The normalized source line is attached post-construction (the
+    # rules emit positions; the driver owns file contents).
+    snippet: str = ""
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "symbol": self.symbol,
+            "fingerprint": self.fingerprint,
+        }
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return (
+            f"{self.path}:{self.line}:{self.col}: "
+            f"{self.rule} {self.message}{sym}"
+        )
+
+
+def sort_key(f: Finding) -> tuple:
+    return (f.path, f.line, f.col, f.rule, f.message)
+
+
+def with_snippet(f: Finding, lines: list[str]) -> Finding:
+    idx = f.line - 1
+    text = lines[idx].strip() if 0 <= idx < len(lines) else ""
+    return dataclasses.replace(f, snippet=text)
+
+
+def suppressed_lines(lines: list[str]) -> dict[int, set[str] | None]:
+    """1-based line -> suppressed codes; None means suppress-all.
+
+    Matches the conventional per-line form ``# noqa`` (everything) and
+    ``# noqa: CIM101`` / ``# noqa: CIM101, CIM201`` (those codes only).
+    Foreign codes (ruff's ``BLE001`` etc.) suppress nothing here but
+    also hide nothing — only codes listed on the line are honored.
+    """
+    out: dict[int, set[str] | None] = {}
+    for i, raw in enumerate(lines, start=1):
+        if "#" not in raw or "noqa" not in raw.lower():
+            continue
+        m = _NOQA_RE.search(raw)
+        if not m:
+            continue
+        codes = m.group("codes")
+        if codes is None:
+            out[i] = None  # blanket noqa
+        else:
+            out[i] = {c.strip().upper() for c in codes.split(",")}
+    return out
+
+
+def is_suppressed(
+    f: Finding, noqa: dict[int, set[str] | None]
+) -> bool:
+    codes = noqa.get(f.line, "absent")
+    if codes == "absent":
+        return False
+    return codes is None or f.rule in codes
+
+
+def rel_path(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()

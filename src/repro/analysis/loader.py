@@ -1,0 +1,415 @@
+"""Parse a source tree into the shapes the invariant rules consume.
+
+One pass over every ``.py`` file under the analyzed roots produces:
+
+* a :class:`Module` per file — AST, raw lines, an import *alias map*
+  (``jnp`` -> ``jax.numpy``, ``matmul_lib`` -> ``repro.core.matmul``)
+  so attribute chains resolve to dotted names without executing code;
+* a :class:`FunctionInfo` per (possibly nested) function with its
+  best-effort resolved call targets — the edges of the project call
+  graph;
+* the *traced roots*: every function reference passed to a JAX tracing
+  entry point (``jax.jit``/``vmap``/``pmap``, ``lax.scan``/``cond``/
+  ``while_loop``/``fori_loop``/``map``/``switch``, ``pallas_call``,
+  ``jax.checkpoint``) whether as a call argument or a decorator, plus
+  any ``static_argnames`` the jit site declares (those parameters are
+  compile-time constants, not tracers).
+
+:func:`reachable_from_traced` closes the roots over the call graph —
+the reachability set CIM101 scans for host readbacks. Resolution is
+deliberately static and conservative: a callee we cannot resolve is
+dropped (under-approximation), never guessed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Iterable
+
+# Tracing entry points: dotted callee -> indices of the traced
+# positional args (None = first positional only, the wrapper form).
+_TRACE_WRAPPERS = {
+    "jax.jit": (0,),
+    "jax.pmap": (0,),
+    "jax.vmap": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.named_call": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2, 3),
+    "jax.lax.switch": (1,),
+    "jax.lax.associative_scan": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function (or lambda) definition and its resolved call edges."""
+
+    qualname: str  # e.g. repro.core.matmul.cim_matmul_int.<locals>.body
+    module: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    calls: set[str] = dataclasses.field(default_factory=set)
+    # Parameter names declared static at a jit site (compile-time
+    # constants — expressions over them are not tracer readbacks).
+    static_params: set[str] = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class TracedRoot:
+    """One function reference handed to a tracing entry point."""
+
+    qualname: str  # of the traced function
+    via: str  # the tracing callee, e.g. "jax.lax.scan"
+    module: str
+    line: int
+
+
+@dataclasses.dataclass
+class Module:
+    name: str  # dotted module name, e.g. "repro.core.variants"
+    path: Path
+    tree: ast.Module
+    lines: list[str]
+    aliases: dict[str, str] = dataclasses.field(default_factory=dict)
+    functions: dict[str, FunctionInfo] = dataclasses.field(
+        default_factory=dict
+    )
+    roots: list[TracedRoot] = dataclasses.field(default_factory=list)
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Dotted name of a Name/Attribute chain via the alias map.
+
+        ``jnp.mean`` -> ``jax.numpy.mean``; unresolvable shapes
+        (subscripts, calls in the chain) return None.
+        """
+        parts: list[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        base = self.aliases.get(cur.id, cur.id)
+        return ".".join([base] + list(reversed(parts)))
+
+
+def module_name_for(path: Path) -> str:
+    """Dotted module name from the filesystem package structure.
+
+    Walks up while ``__init__.py`` siblings exist so ``.../src/repro/
+    core/matmul.py`` names itself ``repro.core.matmul`` regardless of
+    which directory the analyzer was pointed at.
+    """
+    path = path.resolve()
+    parts = [path.stem] if path.stem != "__init__" else []
+    pkg = path.parent
+    while (pkg / "__init__.py").exists():
+        parts.insert(0, pkg.name)
+        pkg = pkg.parent
+    return ".".join(parts) if parts else path.stem
+
+
+def iter_source_files(roots: Iterable[Path]) -> list[Path]:
+    files: list[Path] = []
+    for root in roots:
+        root = Path(root)
+        if root.is_file() and root.suffix == ".py":
+            files.append(root)
+        elif root.is_dir():
+            files.extend(sorted(root.rglob("*.py")))
+    # De-dup while preserving deterministic order.
+    seen: set[Path] = set()
+    out = []
+    for f in files:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            out.append(f)
+    return out
+
+
+def _collect_aliases(tree: ast.Module, module: str) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    pkg_parts = module.split(".")[:-1]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative: resolve against this package
+                base_parts = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                base = ".".join(base_parts + ([node.module] if node.module else []))
+            else:
+                base = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                target = f"{base}.{a.name}" if base else a.name
+                aliases[a.asname or a.name] = target
+    return aliases
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            names: set[str] = set()
+            vals = (
+                kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value]
+            )
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    names.add(v.value)
+            return names
+    return set()
+
+
+def _param_names(fn: ast.AST) -> list[str]:
+    args = fn.args
+    out = [a.arg for a in args.posonlyargs + args.args]
+    out += [a.arg for a in args.kwonlyargs]
+    return out
+
+
+class _Indexer(ast.NodeVisitor):
+    """Builds the function index + call edges + traced roots."""
+
+    def __init__(self, mod: Module) -> None:
+        self.mod = mod
+        # Scope stack of (qualname, {local def name -> qualname}).
+        self.stack: list[tuple[str, dict[str, str]]] = [
+            (mod.name, {})
+        ]
+        # Pre-register module-level defs so calls to functions defined
+        # *later* in the file still resolve to call-graph edges.
+        self._register_child_defs(mod.tree)
+
+    def _register_child_defs(self, node: ast.AST) -> None:
+        for child in getattr(node, "body", []):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.stack[-1][1][child.name] = self._qual(child.name)
+
+    # -- scope helpers ---------------------------------------------------
+
+    @property
+    def scope(self) -> str:
+        return self.stack[-1][0]
+
+    def _qual(self, name: str) -> str:
+        if len(self.stack) == 1:
+            return f"{self.mod.name}.{name}"
+        return f"{self.scope}.<locals>.{name}"
+
+    def _lookup_func(self, name: str) -> str | None:
+        """Resolve a bare name to a function qualname, innermost first."""
+        for _, local in reversed(self.stack):
+            if name in local:
+                return local[name]
+        target = self.mod.aliases.get(name)
+        return target  # imported function (or None)
+
+    def _current_info(self) -> FunctionInfo | None:
+        return self.mod.functions.get(self.scope)
+
+    # -- defs ------------------------------------------------------------
+
+    def _visit_func(self, node, name: str) -> None:
+        qual = self._qual(name)
+        self.stack[-1][1][name] = qual
+        info = FunctionInfo(qualname=qual, module=self.mod.name, node=node)
+        self.mod.functions[qual] = info
+        for dec in getattr(node, "decorator_list", []):
+            self._check_decorator(dec, qual, info)
+        self.stack.append((qual, {}))
+        self._register_child_defs(node)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_func(node, node.name)
+
+    def visit_AsyncFunctionDef(self, node) -> None:
+        self._visit_func(node, node.name)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        qual = f"{self.scope}.<locals>.<lambda@{node.lineno}>"
+        self.mod.functions[qual] = FunctionInfo(
+            qualname=qual, module=self.mod.name, node=node
+        )
+        self.stack.append((qual, {}))
+        self.visit(node.body)
+        self.stack.pop()
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        qual = self._qual(node.name) if len(self.stack) > 1 else (
+            f"{self.mod.name}.{node.name}"
+        )
+        self.stack.append((qual, {}))
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self.stack.pop()
+
+    # -- traced roots ----------------------------------------------------
+
+    def _check_decorator(
+        self, dec: ast.AST, qual: str, info: FunctionInfo
+    ) -> None:
+        """``@jax.jit`` / ``@partial(jax.jit, static_argnames=...)``."""
+        call = dec if isinstance(dec, ast.Call) else None
+        target = dec
+        statics: set[str] = set()
+        if call is not None:
+            resolved = self.mod.resolve(call.func)
+            if resolved in ("functools.partial", "partial") and call.args:
+                target = call.args[0]
+                statics = _static_argnames(call)
+            else:
+                target = call.func
+                statics = _static_argnames(call)
+        resolved = self.mod.resolve(target)
+        if resolved in _TRACE_WRAPPERS:
+            self.mod.roots.append(TracedRoot(
+                qualname=qual, via=resolved, module=self.mod.name,
+                line=getattr(dec, "lineno", 0),
+            ))
+            info.static_params |= statics
+
+    def _func_ref(self, node: ast.AST) -> str | None:
+        """Resolve an expression used as a function argument."""
+        if isinstance(node, ast.Lambda):
+            # Lambdas were assigned a qualname when visited; synthesize
+            # the same name (visit order guarantees it exists by the
+            # time reachability runs).
+            return f"{self.scope}.<locals>.<lambda@{node.lineno}>"
+        if isinstance(node, ast.Call):
+            # functools.partial(f, ...) -> f
+            resolved = self.mod.resolve(node.func)
+            if resolved in ("functools.partial", "partial") and node.args:
+                return self._func_ref(node.args[0])
+            return None
+        if isinstance(node, ast.Name):
+            return self._lookup_func(node.id)
+        if isinstance(node, ast.Attribute):
+            return self.mod.resolve(node)
+        return None
+
+    def visit_Call(self, node: ast.Call) -> None:
+        info = self._current_info()
+        callee = self.mod.resolve(node.func)
+        if callee is None and isinstance(node.func, ast.Name):
+            callee = self._lookup_func(node.func.id)
+        if info is not None and callee is not None:
+            info.calls.add(callee)
+        if isinstance(node.func, ast.Name) and callee is None:
+            pass
+        # Record bare-name local calls as edges too (nested helpers).
+        if info is not None and isinstance(node.func, ast.Name):
+            local = self._lookup_func(node.func.id)
+            if local is not None:
+                info.calls.add(local)
+        if callee in _TRACE_WRAPPERS:
+            statics = _static_argnames(node)
+            for idx in _TRACE_WRAPPERS[callee]:
+                if idx < len(node.args):
+                    ref = self._func_ref(node.args[idx])
+                    if ref is not None:
+                        self.mod.roots.append(TracedRoot(
+                            qualname=ref, via=callee,
+                            module=self.mod.name, line=node.lineno,
+                        ))
+                        fn = self.mod.functions.get(ref)
+                        if fn is not None:
+                            fn.static_params |= statics
+        self.generic_visit(node)
+
+
+def load_module(path: Path) -> Module | None:
+    try:
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None
+    name = module_name_for(path)
+    mod = Module(
+        name=name, path=path, tree=tree,
+        lines=source.splitlines(),
+        aliases=_collect_aliases(tree, name),
+    )
+    _Indexer(mod).visit(tree)
+    return mod
+
+
+@dataclasses.dataclass
+class Project:
+    """Everything the rules consume: modules, call graph, reachability."""
+
+    modules: dict[str, Module]
+    functions: dict[str, FunctionInfo]
+    # traced qualname -> (via, provenance root qualname)
+    reachable: dict[str, tuple[str, str]]
+
+    @classmethod
+    def load(cls, paths: Iterable[Path]) -> "Project":
+        modules: dict[str, Module] = {}
+        for f in iter_source_files(paths):
+            mod = load_module(f)
+            if mod is not None:
+                modules[mod.name] = mod
+        functions: dict[str, FunctionInfo] = {}
+        for mod in modules.values():
+            functions.update(mod.functions)
+        reachable = reachable_from_traced(modules, functions)
+        return cls(
+            modules=modules, functions=functions, reachable=reachable
+        )
+
+
+def reachable_from_traced(
+    modules: dict[str, Module],
+    functions: dict[str, FunctionInfo],
+) -> dict[str, tuple[str, str]]:
+    """BFS the call graph from every traced root.
+
+    Returns ``qualname -> (via, root_qualname)`` where ``via`` is the
+    tracing entry point that made the root traced and ``root_qualname``
+    the original root — kept as provenance so CIM101 messages can say
+    *why* a function is considered traced.
+    """
+    reach: dict[str, tuple[str, str]] = {}
+    queue: list[str] = []
+    for mod in modules.values():
+        for root in mod.roots:
+            if root.qualname in functions and root.qualname not in reach:
+                reach[root.qualname] = (root.via, root.qualname)
+                queue.append(root.qualname)
+    while queue:
+        cur = queue.pop()
+        via, origin = reach[cur]
+        info = functions.get(cur)
+        if info is None:
+            continue
+        for callee in info.calls:
+            target = _resolve_callee(callee, functions)
+            if target is not None and target not in reach:
+                reach[target] = (via, origin)
+                queue.append(target)
+    return reach
+
+
+def _resolve_callee(
+    callee: str, functions: dict[str, FunctionInfo]
+) -> str | None:
+    if callee in functions:
+        return callee
+    return None

@@ -1,0 +1,30 @@
+"""Rule registry: stable ids -> rule implementations.
+
+Every rule is ``check(project) -> Iterator[Finding]``. Ids are
+append-only (a retired rule keeps its number reserved) so baselines
+and ``# noqa`` comments never change meaning between versions.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules import (
+    cim101_tracer,
+    cim201_determinism,
+    cim301_registry,
+    cim401_fallback,
+    cim501_donation,
+)
+
+ALL_RULES = (
+    cim101_tracer.Rule(),
+    cim201_determinism.Rule(),
+    cim301_registry.Rule(),
+    cim401_fallback.Rule(),
+    cim501_donation.Rule(),
+)
+
+RULE_IDS = tuple(r.id for r in ALL_RULES)
+
+
+def rule_catalog() -> dict[str, str]:
+    return {r.id: r.summary for r in ALL_RULES}

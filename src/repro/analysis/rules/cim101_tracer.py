@@ -1,0 +1,331 @@
+"""CIM101 — host readback of a traced value inside traced code.
+
+The bug class: ``float()``/``int()``/``bool()``/``np.asarray()``/
+``.item()``/``.tolist()`` force a concrete host value, which raises
+``ConcretizationTypeError`` on a tracer — but only at run time, and
+only on the execution paths that actually trace the function. PR 5's
+``merged_sigma`` bug is the canonical instance: a ``float()`` over a
+``plane_signs(...)`` array deep inside the noisy adder-tree scan body
+broke every noisy adder-tree execution while the noise-free tests
+stayed green.
+
+Detection is reachability-based, not syntactic: the loader collects
+every function reference handed to a tracing entry point
+(``jax.jit``/``vmap``/``lax.scan``/... bodies, Pallas kernels,
+decorator or call form) and closes that set over the project call
+graph. Readback calls are only flagged *inside* the closure — a
+``float()`` in host-side driver code is fine and stays silent.
+
+Noise control — an argument is treated as a compile-time scalar (and
+skipped) when it is provably not a traced array:
+
+* constants and pure-``math``/safelisted-builtin expressions over them;
+* parameters a jit site declared in ``static_argnames``;
+* parameters *annotated* with an operating-point/config type
+  (``MacroSpec``, ``CIMConfig``, ... — see ``CONFIG_TYPES``): this
+  repo's convention is that those dataclasses carry Python scalars,
+  never tracers, and the whole calibration machinery relies on it;
+* locals derived only from the above (single textual pass), including
+  through the known spec producers ``as_spec``/``merged_quant`` and
+  ``.replace(...)`` on a static value.
+
+Anything rooted in ``jax.*``/``jnp.*`` or otherwise unresolvable is
+flagged. Intentional host-side reads inside a reachable function take
+a per-line ``# noqa: CIM101`` with a short reason.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import FunctionInfo, Module, Project
+
+READBACK_BUILTINS = {"float", "int", "bool", "complex"}
+READBACK_METHODS = {"item", "tolist", "__array__"}
+_NUMPY_READBACKS = {"asarray", "array", "copy"}
+# Calls whose scalar result is host-side by construction when their
+# own arguments are: these never *create* a tracer.
+_SAFE_CALL_BUILTINS = {
+    "round", "len", "abs", "ord", "min", "max", "sum", "pow", "divmod",
+    "range", "str", "repr", "hash",
+}
+_SAFE_MODULE_ROOTS = {"math", "os", "time", "sys"}
+_JAX_ROOTS = ("jax", "jax.numpy", "jax.lax", "jax.random", "jax.nn")
+# Annotations naming these types mark a parameter as a config/operating
+# point record of Python scalars (the repo-wide convention), not a
+# traced value. Project-specific by design — this is a project linter.
+CONFIG_TYPES = {
+    "int", "float", "bool", "str", "bytes",
+    "KernelKey", "MacroVariant", "CalibrationGrid", "MergedQuant",
+}
+# ...plus the naming convention every operating-point record follows
+# (MacroSpec, CIMConfig, MoEConfig, CIMPolicy, ADCSpec, ...).
+_CONFIG_SUFFIXES = ("Config", "Spec", "Policy")
+# Functions returning config records when fed config records.
+_SPEC_PRODUCERS = {
+    "as_spec", "merged_quant", "adapt_spec", "anchor_spec", "from_config",
+}
+
+
+class Rule:
+    id = "CIM101"
+    summary = (
+        "host readback (float/int/bool/np.asarray/.item) reachable "
+        "from a jit/scan/vmap-traced body"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for qual, (via, origin) in sorted(project.reachable.items()):
+            info = project.functions.get(qual)
+            if info is None:
+                continue
+            mod = project.modules.get(info.module)
+            if mod is None:
+                continue
+            yield from _scan_function(mod, info, via, origin)
+
+
+def _scan_function(
+    mod: Module, info: FunctionInfo, via: str, origin: str
+) -> Iterator[Finding]:
+    statics = _initial_statics(info)
+    body = (
+        info.node.body
+        if isinstance(info.node.body, list)
+        else [info.node.body]  # Lambda
+    )
+    for stmt in body:
+        _propagate_statics(stmt, mod, statics)
+        for node in _walk_own(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            hit = _readback_kind(node, mod)
+            if hit is None:
+                continue
+            kind, arg = hit
+            if arg is not None and _is_static_expr(arg, mod, statics):
+                continue
+            yield Finding(
+                rule=Rule.id,
+                path="",  # filled by the driver from mod.path
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"{kind} forces a host value inside traced code "
+                    f"(reachable from {via} via '{_short(origin)}') — "
+                    "raises ConcretizationTypeError on a tracer"
+                ),
+                symbol=info.qualname,
+            )
+
+
+def _short(qual: str) -> str:
+    parts = qual.split(".<locals>.")
+    return parts[0].split(".")[-1] + (
+        "." + parts[-1] if len(parts) > 1 else ""
+    )
+
+
+def _walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    """ast.walk that does not descend into nested function bodies.
+
+    Nested defs/lambdas are separate entries in the reachability set
+    and get their own scan — double-reporting would attribute the
+    finding to the wrong symbol.
+    """
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(
+            child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        yield from _walk_own(child)
+
+
+def _readback_kind(
+    call: ast.Call, mod: Module
+) -> tuple[str, ast.AST | None] | None:
+    func = call.func
+    # float(x) / int(x) / bool(x) — builtin, single positional arg.
+    if isinstance(func, ast.Name) and func.id in READBACK_BUILTINS:
+        if func.id in mod.aliases:
+            return None  # shadowed by an import
+        if len(call.args) != 1 or call.keywords:
+            return None  # int(s, 16), float() etc. — not a readback
+        return (f"{func.id}()", call.args[0])
+    if isinstance(func, ast.Attribute):
+        resolved = mod.resolve(func)
+        if resolved is not None:
+            root, _, attr = resolved.rpartition(".")
+            if root == "numpy" and attr in _NUMPY_READBACKS:
+                arg = call.args[0] if call.args else None
+                return (f"np.{attr}()", arg)
+        # .item() / .tolist() on anything — value-level host pull.
+        if func.attr in READBACK_METHODS and not call.args:
+            if resolved is not None and _rooted_in(
+                resolved, _SAFE_MODULE_ROOTS
+            ):
+                return None
+            return (f".{func.attr}()", func.value)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Static-value (non-tracer) classification
+# ---------------------------------------------------------------------------
+
+
+def _initial_statics(info: FunctionInfo) -> set[str]:
+    statics = set(info.static_params)
+    node = info.node
+    args = getattr(node, "args", None)
+    if args is None:
+        return statics
+    for a in args.posonlyargs + args.args + args.kwonlyargs:
+        if a.annotation is not None and _config_annotation(a.annotation):
+            statics.add(a.arg)
+    return statics
+
+
+def _config_annotation(ann: ast.AST) -> bool:
+    """True when every named type in the annotation is config-like."""
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:  # quoted annotation: "MacroSpec | CIMConfig"
+            ann = ast.parse(ann.value, mode="eval").body
+        except SyntaxError:
+            return False
+    leaves: list[str] = []
+
+    def collect(node: ast.AST) -> None:
+        if isinstance(node, ast.Name):
+            leaves.append(node.id)
+        elif isinstance(node, ast.Attribute):
+            leaves.append(node.attr)  # take the chain leaf only
+        else:
+            for child in ast.iter_child_nodes(node):
+                collect(child)
+
+    collect(ann)
+    return bool(leaves) and all(
+        name in CONFIG_TYPES or name.endswith(_CONFIG_SUFFIXES)
+        for name in leaves
+    )
+
+
+def _propagate_statics(
+    stmt: ast.stmt, mod: Module, statics: set[str]
+) -> None:
+    """x = <static expr> makes x static; any other binding kills it."""
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and (
+        isinstance(stmt.targets[0], ast.Name)
+    ):
+        name = stmt.targets[0].id
+        if _is_static_expr(stmt.value, mod, statics):
+            statics.add(name)
+        else:
+            statics.discard(name)
+    elif isinstance(stmt, ast.AnnAssign) and isinstance(
+        stmt.target, ast.Name
+    ):
+        if stmt.value is not None and _is_static_expr(
+            stmt.value, mod, statics
+        ):
+            statics.add(stmt.target.id)
+        else:
+            statics.discard(stmt.target.id)
+    else:
+        # Loops/with/augmented assigns: drop any name they rebind.
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Name) and isinstance(
+                sub.ctx, (ast.Store, ast.Del)
+            ):
+                statics.discard(sub.id)
+
+
+def _rooted_in(dotted: str, roots: set[str]) -> bool:
+    return dotted.split(".")[0] in roots
+
+
+def _is_static_expr(
+    node: ast.AST, mod: Module, statics: set[str]
+) -> bool:
+    """True when the expression provably holds no traced value."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in statics
+    if isinstance(node, ast.Attribute):
+        # spec.cutoff where spec is a config record; math.pi etc.
+        if _is_static_expr(node.value, mod, statics):
+            return True
+        base = node.value
+        while isinstance(base, ast.Attribute):
+            base = base.value
+        if isinstance(base, ast.Name):
+            resolved = mod.resolve(node)
+            if resolved is not None and _rooted_in(
+                resolved, _SAFE_MODULE_ROOTS
+            ):
+                return True
+        return False
+    if isinstance(node, ast.Call):
+        resolved = mod.resolve(node.func)
+        if resolved is not None:
+            if any(
+                resolved == r or resolved.startswith(r + ".")
+                for r in _JAX_ROOTS
+            ):
+                return False  # jax-rooted: definitely traced
+            if _rooted_in(resolved, _SAFE_MODULE_ROOTS):
+                return _args_static(node, mod, statics)
+            if resolved.rpartition(".")[2] in _SPEC_PRODUCERS:
+                return _args_static(node, mod, statics)
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+            if name in _SAFE_CALL_BUILTINS and name not in mod.aliases:
+                return _args_static(node, mod, statics)
+            if name in _SPEC_PRODUCERS:
+                return _args_static(node, mod, statics)
+        if isinstance(node.func, ast.Attribute):
+            # spec.replace(...) on a static value stays static.
+            if node.func.attr in {"replace", "evolve"} | _SPEC_PRODUCERS:
+                if _is_static_expr(node.func.value, mod, statics):
+                    return _args_static(node, mod, statics)
+        return False
+    if isinstance(node, ast.BinOp):
+        return _is_static_expr(node.left, mod, statics) and _is_static_expr(
+            node.right, mod, statics
+        )
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand, mod, statics)
+    if isinstance(node, ast.Compare):
+        return _is_static_expr(node.left, mod, statics) and all(
+            _is_static_expr(c, mod, statics) for c in node.comparators
+        )
+    if isinstance(node, ast.BoolOp):
+        return all(_is_static_expr(v, mod, statics) for v in node.values)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(_is_static_expr(e, mod, statics) for e in node.elts)
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value, mod, statics)
+    if isinstance(node, ast.IfExp):
+        return (
+            _is_static_expr(node.test, mod, statics)
+            and _is_static_expr(node.body, mod, statics)
+            and _is_static_expr(node.orelse, mod, statics)
+        )
+    return False
+
+
+def _args_static(
+    call: ast.Call, mod: Module, statics: set[str]
+) -> bool:
+    return all(
+        _is_static_expr(a, mod, statics) for a in call.args
+    ) and all(
+        _is_static_expr(k.value, mod, statics) for k in call.keywords
+    )

@@ -1,0 +1,194 @@
+"""CIM201 — nondeterministic content in artifact-writing modules.
+
+The repo's committed artifacts (autotune caches, sweep ``points.jsonl``
+finalization, pareto reports, calibration dumps) are byte-identical
+across reruns *only because every writer remembers* ``sort_keys=True``
+and keeps wall-clock/random state out of the payload. That contract
+has so far been enforced by review memory; this rule enforces it
+mechanically.
+
+Scope: a module is *artifact-writing* when it contains a file write —
+``json.dump(obj, fh)``, ``.write_text(...)``, ``.write(...)`` or an
+``open(..., "w"/"a")`` call. Inside such modules the rule flags:
+
+* ``json.dump``/``json.dumps`` without a literal ``sort_keys=True``
+  (dict iteration order is insertion order — stable for one process,
+  but any code path that builds the dict differently reorders the
+  artifact silently);
+* wall-clock and RNG taps: ``time.time``/``time.time_ns``/
+  ``datetime.now``/``datetime.utcnow`` and the stdlib ``random.*``
+  module (``jax.random`` is keyed and deterministic — not flagged);
+  timing that is *meant* to be recorded (benchmark walls) takes a
+  ``# noqa: CIM201`` with a reason;
+* iteration over an unordered ``set`` value (set literal, ``set(...)``
+  call, set comprehension, or a local assigned from one) in a ``for``
+  or comprehension, unless wrapped in ``sorted(...)`` — set order is
+  hash-seed dependent across processes.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Module, Project
+
+_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+_RANDOM_ROOT = "random"
+
+
+class Rule:
+    id = "CIM201"
+    summary = (
+        "nondeterministic artifact content (unsorted json.dump, "
+        "clock/random taps, set iteration) in a file-writing module"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for name in sorted(project.modules):
+            mod = project.modules[name]
+            if not _writes_files(mod):
+                continue
+            yield from _scan_module(mod)
+
+
+def _writes_files(mod: Module) -> bool:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            if func.attr in ("write_text", "write_bytes"):
+                return True
+            resolved = mod.resolve(func)
+            if resolved == "json.dump" and len(node.args) >= 2:
+                return True
+        if isinstance(func, ast.Name) and func.id == "open":
+            mode = _open_mode(node)
+            if mode and any(c in mode for c in "wax+"):
+                return True
+        if isinstance(func, ast.Attribute) and func.attr == "open":
+            mode = _open_mode(node)
+            if mode and any(c in mode for c in "wax+"):
+                return True
+    return False
+
+
+def _open_mode(call: ast.Call) -> str | None:
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        v = call.args[1].value
+        return v if isinstance(v, str) else None
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            v = kw.value.value
+            return v if isinstance(v, str) else None
+    return None
+
+
+def _scan_module(mod: Module) -> Iterator[Finding]:
+    set_locals: set[str] = set()
+    for node in ast.walk(mod.tree):
+        # Track names assigned from set-valued expressions (whole
+        # module, name-level — coarse but cheap; sorted() use sites
+        # are exempted below either way).
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+            isinstance(node.targets[0], ast.Name)
+        ):
+            if _is_set_expr(node.value, mod, set_locals):
+                set_locals.add(node.targets[0].id)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            yield from _check_call(node, mod)
+        elif isinstance(node, ast.For):
+            yield from _check_iter(node.iter, mod, set_locals)
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.DictComp)):
+            for gen in node.generators:
+                yield from _check_iter(gen.iter, mod, set_locals)
+
+
+def _check_call(node: ast.Call, mod: Module) -> Iterator[Finding]:
+    resolved = mod.resolve(node.func)
+    if resolved in ("json.dump", "json.dumps"):
+        if not _has_true_kw(node, "sort_keys"):
+            yield _finding(
+                node, mod,
+                f"{resolved}() without sort_keys=True in an "
+                "artifact-writing module — insertion-ordered output is "
+                "not reproducible across writers",
+            )
+        return
+    if resolved in _CLOCK_CALLS:
+        yield _finding(
+            node, mod,
+            f"{resolved}() in an artifact-writing module — wall-clock "
+            "values make artifacts non-reproducible (noqa with a "
+            "reason if the timing is the payload)",
+        )
+        return
+    if resolved is not None and resolved.startswith(_RANDOM_ROOT + "."):
+        yield _finding(
+            node, mod,
+            f"stdlib {resolved}() in an artifact-writing module — "
+            "unseeded process-global RNG; use keyed jax.random or a "
+            "seeded np.random.Generator",
+        )
+
+
+def _has_true_kw(call: ast.Call, name: str) -> bool:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return isinstance(kw.value, ast.Constant) and (
+                kw.value.value is True
+            )
+    return False
+
+
+def _check_iter(
+    it: ast.AST, mod: Module, set_locals: set[str]
+) -> Iterator[Finding]:
+    if _is_set_expr(it, mod, set_locals):
+        yield _finding(
+            it, mod,
+            "iteration over an unordered set in an artifact-writing "
+            "module — wrap in sorted(...) for a stable order",
+        )
+
+
+def _is_set_expr(
+    node: ast.AST, mod: Module, set_locals: set[str]
+) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id == "set":
+            return "set" not in mod.aliases
+        if isinstance(node.func, ast.Attribute) and node.func.attr in (
+            "union", "intersection", "difference", "symmetric_difference",
+        ):
+            return _is_set_expr(node.func.value, mod, set_locals)
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in set_locals
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.Sub, ast.BitOr, ast.BitAnd, ast.BitXor)
+    ):
+        return _is_set_expr(node.left, mod, set_locals) or _is_set_expr(
+            node.right, mod, set_locals
+        )
+    return False
+
+
+def _finding(node: ast.AST, mod: Module, message: str) -> Finding:
+    return Finding(
+        rule=Rule.id,
+        path="",
+        line=getattr(node, "lineno", 1),
+        col=getattr(node, "col_offset", 0),
+        message=message,
+        symbol=mod.name,
+    )

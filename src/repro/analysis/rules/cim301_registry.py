@@ -1,0 +1,262 @@
+"""CIM301 — macro-variant registry contract drift.
+
+`ROADMAP` promises that adding a macro variant is ONE registration —
+but only because three other surfaces stay in lockstep: the
+``kernels.dispatch`` table must carry the variant's kernel entries,
+``core.energy.VARIANT_ANCHORS`` must carry its TOPS/W anchor (the
+calibrator's cost axis raises ``KeyError`` mid-sweep otherwise), and
+at least one test must exercise the name. PR 3/PR 4 kept these in sync
+by hand; this rule cross-checks the registration call sites statically
+so the drift is caught at lint time, not one layer deep into a
+calibration run.
+
+Statically collected, by resolved name (not module path, so fixture
+trees exercise the rule too):
+
+* variant definitions — calls to ``MacroVariant(...)`` or any class
+  whose bases include ``MacroVariant``, with a literal ``name=``;
+* dispatch entries — ``register_kernel(KernelKey("<variant>", ...))``
+  call sites with a literal first argument;
+* energy anchors — literal string keys of any ``VARIANT_ANCHORS = {...}``
+  dict assignment;
+* test references — the variant name appearing anywhere in the
+  configured tests directory's source text.
+
+A variant missing any leg is flagged at its constructor; dispatch
+entries and anchors naming a variant that no longer exists are flagged
+as reverse drift. The rule is silent on trees that define no variants.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Module, Project
+
+VARIANT_BASE = "MacroVariant"
+ANCHORS_NAME = "VARIANT_ANCHORS"
+REGISTER_KERNEL = "register_kernel"
+KERNEL_KEY = "KernelKey"
+
+
+@dataclasses.dataclass
+class _Site:
+    module: str
+    line: int
+    col: int
+
+
+class Rule:
+    id = "CIM301"
+    summary = (
+        "variant registration without matching dispatch entry, "
+        "energy anchor, or test reference (and reverse drift)"
+    )
+
+    def __init__(self) -> None:
+        self.tests_dir: Path | None = None  # injected by the driver
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        variant_classes = _variant_class_names(project)
+        variants = _variant_defs(project, variant_classes)
+        if not variants:
+            return
+        dispatch = _dispatch_variants(project)
+        anchors = _anchor_variants(project)
+        tested = _tested_names(self.tests_dir)
+
+        for name in sorted(variants):
+            site = variants[name]
+            missing = []
+            if name not in dispatch:
+                missing.append(
+                    "no kernels.dispatch register_kernel(KernelKey(...)) "
+                    "entry"
+                )
+            if name not in anchors:
+                missing.append(
+                    f"no {ANCHORS_NAME} energy anchor (TOPS/W cost axis "
+                    "raises KeyError mid-calibration)"
+                )
+            if tested is not None and name not in tested:
+                missing.append("no test references the variant name")
+            if missing:
+                yield Finding(
+                    rule=self.id,
+                    path="",
+                    line=site.line,
+                    col=site.col,
+                    message=(
+                        f"macro variant '{name}' breaks the registry "
+                        f"contract: {'; '.join(missing)}"
+                    ),
+                    symbol=site.module,
+                )
+
+        for name in sorted(set(dispatch) - set(variants)):
+            site = dispatch[name]
+            yield Finding(
+                rule=self.id, path="", line=site.line, col=site.col,
+                message=(
+                    f"dispatch kernel registered for unknown variant "
+                    f"'{name}' (no MacroVariant defines it)"
+                ),
+                symbol=site.module,
+            )
+        for name in sorted(set(anchors) - set(variants)):
+            site = anchors[name]
+            yield Finding(
+                rule=self.id, path="", line=site.line, col=site.col,
+                message=(
+                    f"energy anchor for unknown variant '{name}' "
+                    "(no MacroVariant defines it)"
+                ),
+                symbol=site.module,
+            )
+
+
+def _variant_class_names(project: Project) -> set[str]:
+    """MacroVariant + every class transitively subclassing it."""
+    names = {VARIANT_BASE}
+    # Fixed-point over single-level base-name matching (class bases are
+    # matched by leaf name: `_CellADCVariant(MacroVariant)` and
+    # `x.MacroVariant` both count).
+    classes: list[tuple[str, set[str]]] = []
+    for mod in project.modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                bases = set()
+                for b in node.bases:
+                    if isinstance(b, ast.Name):
+                        bases.add(b.id)
+                    elif isinstance(b, ast.Attribute):
+                        bases.add(b.attr)
+                classes.append((node.name, bases))
+    changed = True
+    while changed:
+        changed = False
+        for cls, bases in classes:
+            if cls not in names and bases & names:
+                names.add(cls)
+                changed = True
+    return names
+
+
+def _variant_defs(
+    project: Project, variant_classes: set[str]
+) -> dict[str, _Site]:
+    out: dict[str, _Site] = {}
+    for mod in project.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = node.func
+            leaf = None
+            if isinstance(callee, ast.Name):
+                leaf = callee.id
+            elif isinstance(callee, ast.Attribute):
+                leaf = callee.attr
+            if leaf not in variant_classes:
+                continue
+            for kw in node.keywords:
+                if kw.arg == "name" and isinstance(
+                    kw.value, ast.Constant
+                ) and isinstance(kw.value.value, str):
+                    out.setdefault(
+                        kw.value.value,
+                        _Site(mod.name, node.lineno, node.col_offset),
+                    )
+    return out
+
+
+def _dispatch_variants(project: Project) -> dict[str, _Site]:
+    out: dict[str, _Site] = {}
+    for mod in project.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            leaf = (
+                node.func.id if isinstance(node.func, ast.Name)
+                else node.func.attr if isinstance(node.func, ast.Attribute)
+                else None
+            )
+            if leaf != REGISTER_KERNEL or not node.args:
+                continue
+            key = node.args[0]
+            if not (
+                isinstance(key, ast.Call)
+                and (
+                    (isinstance(key.func, ast.Name)
+                     and key.func.id == KERNEL_KEY)
+                    or (isinstance(key.func, ast.Attribute)
+                        and key.func.attr == KERNEL_KEY)
+                )
+            ):
+                continue
+            variant = None
+            if key.args and isinstance(key.args[0], ast.Constant):
+                variant = key.args[0].value
+            for kw in key.keywords:
+                if kw.arg == "variant" and isinstance(
+                    kw.value, ast.Constant
+                ):
+                    variant = kw.value.value
+            if isinstance(variant, str):
+                out.setdefault(
+                    variant,
+                    _Site(mod.name, node.lineno, node.col_offset),
+                )
+    return out
+
+
+def _anchor_variants(project: Project) -> dict[str, _Site]:
+    out: dict[str, _Site] = {}
+    for mod in project.modules.values():
+        for node in ast.walk(mod.tree):
+            targets: list[ast.AST] = []
+            value = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            if not any(
+                isinstance(t, ast.Name) and t.id == ANCHORS_NAME
+                for t in targets
+            ):
+                continue
+            if not isinstance(value, ast.Dict):
+                continue
+            for k in value.keys:
+                if isinstance(k, ast.Constant) and isinstance(
+                    k.value, str
+                ):
+                    out.setdefault(
+                        k.value,
+                        _Site(mod.name, k.lineno, k.col_offset),
+                    )
+    return out
+
+
+def _tested_names(tests_dir: Path | None) -> set[str] | None:
+    """Full source text of the tests tree; None = no tests to check."""
+    if tests_dir is None or not tests_dir.is_dir():
+        return None
+    blob = []
+    for f in sorted(tests_dir.rglob("*.py")):
+        try:
+            blob.append(f.read_text())
+        except (OSError, UnicodeDecodeError):
+            continue
+    if not blob:
+        return None
+    text = "\n".join(blob)
+
+    class _Contains:
+        def __contains__(self, name: str) -> bool:
+            return name in text
+
+    return _Contains()  # duck-typed set-ish view

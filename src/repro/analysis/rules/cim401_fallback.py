@@ -1,0 +1,163 @@
+"""CIM401 — silent fallback around backend resolution.
+
+``kernels.dispatch`` has a hard no-downgrade contract: an explicit
+backend request either runs or raises, and the *only* sanctioned
+implicit fallback records itself through ``record_resolutions``
+(PR 4's check.sh guard exists precisely because an accidental
+pallas→scan downgrade once hid for a whole PR). This rule flags the
+two ways that contract gets bypassed in code:
+
+* an ``except`` handler that touches backend resolution — a call to
+  ``dispatch(...)``, ``lookup(...)`` or a backend implementation
+  (``*_matmul_int`` / ``*matmul_kernel`` / ``*gpq_matmul``) in the
+  ``try`` body or in the handler itself — while the handler neither
+  re-raises, nor notifies/logs: the failure is swallowed and a
+  different implementation runs without a trace;
+* default-argument fallbacks that smuggle in a backend:
+  ``d.get(key, "scan")`` / ``getattr(mod, name, scan_impl)`` where the
+  default is a backend name literal or an implementation reference —
+  the lookup miss silently becomes a downgrade instead of a KeyError.
+
+Handlers that ``raise``, call a recorder (``_notify``/``record*``), or
+log (``log``/``logger``/``warnings``) are compliant: the fallback is
+loud, which is all the contract asks.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Module, Project
+
+BACKEND_NAMES = {"scan", "ref", "pallas"}
+_RESOLUTION_CALL_NAMES = {"dispatch", "lookup", "resolve_backend"}
+_IMPL_SUFFIXES = ("_matmul_int", "matmul_kernel", "gpq_matmul")
+_LOUD_CALL_NAMES = {
+    "_notify", "warn", "warning", "error", "exception", "info", "debug",
+    "critical", "log",
+}
+
+
+class Rule:
+    id = "CIM401"
+    summary = (
+        "backend-resolution fallback that neither raises nor records "
+        "(bypasses dispatch's no-downgrade contract)"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for name in sorted(project.modules):
+            mod = project.modules[name]
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Try):
+                    yield from _check_try(node, mod)
+                elif isinstance(node, ast.Call):
+                    yield from _check_default_arg(node, mod)
+
+
+def _check_try(node: ast.Try, mod: Module) -> Iterator[Finding]:
+    try_resolves = any(
+        _is_resolution_call(n) for stmt in node.body for n in ast.walk(stmt)
+    )
+    for handler in node.handlers:
+        handler_resolves = any(
+            _is_resolution_call(n)
+            for stmt in handler.body
+            for n in ast.walk(stmt)
+        )
+        if not (try_resolves or handler_resolves):
+            continue
+        if _handler_is_loud(handler):
+            continue
+        what = "bare except" if handler.type is None else (
+            f"except {ast.unparse(handler.type)}"
+        )
+        yield Finding(
+            rule=Rule.id,
+            path="",
+            line=handler.lineno,
+            col=handler.col_offset,
+            message=(
+                f"{what} around backend resolution neither re-raises "
+                "nor records the fallback — a failed kernel silently "
+                "becomes a different implementation (record via "
+                "dispatch's Resolution/notify path, log, or raise)"
+            ),
+            symbol=mod.name,
+        )
+
+
+def _is_resolution_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    leaf = (
+        node.func.id if isinstance(node.func, ast.Name)
+        else node.func.attr if isinstance(node.func, ast.Attribute)
+        else None
+    )
+    if leaf is None:
+        return False
+    return leaf in _RESOLUTION_CALL_NAMES or leaf.endswith(_IMPL_SUFFIXES)
+
+
+def _handler_is_loud(handler: ast.ExceptHandler) -> bool:
+    for stmt in handler.body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Raise):
+                return True
+            if isinstance(n, ast.Call):
+                leaf = (
+                    n.func.id if isinstance(n.func, ast.Name)
+                    else n.func.attr if isinstance(n.func, ast.Attribute)
+                    else None
+                )
+                if leaf in _LOUD_CALL_NAMES:
+                    return True
+                if leaf is not None and leaf.startswith("record"):
+                    return True
+    return False
+
+
+def _check_default_arg(node: ast.Call, mod: Module) -> Iterator[Finding]:
+    func = node.func
+    is_get = isinstance(func, ast.Attribute) and func.attr == "get"
+    is_getattr = isinstance(func, ast.Name) and func.id == "getattr"
+    if is_get and len(node.args) == 2:
+        default = node.args[1]
+    elif is_getattr and len(node.args) == 3:
+        default = node.args[2]
+    else:
+        return
+    if _is_backend_default(default):
+        kind = ".get(key, <backend>)" if is_get else (
+            "getattr(obj, name, <backend>)"
+        )
+        yield Finding(
+            rule=Rule.id,
+            path="",
+            line=node.lineno,
+            col=node.col_offset,
+            message=(
+                f"{kind} defaults a failed backend lookup to "
+                f"'{ast.unparse(default)}' — a miss should raise, not "
+                "silently downgrade (dispatch no-downgrade contract)"
+            ),
+            symbol=mod.name,
+        )
+
+
+def _is_backend_default(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and node.value in BACKEND_NAMES:
+        return True
+    leaf = None
+    if isinstance(node, ast.Name):
+        leaf = node.id
+    elif isinstance(node, ast.Attribute):
+        leaf = node.attr
+    if leaf is None:
+        return False
+    return leaf.endswith(_IMPL_SUFFIXES) or leaf in (
+        "scan_impl", "scan_fallback",
+    )

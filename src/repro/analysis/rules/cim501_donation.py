@@ -1,0 +1,209 @@
+"""CIM501 — use of a buffer after it was donated.
+
+``donate_argnums``/``donate_argnames`` lets XLA alias an input buffer
+into the output (the decode/train hot paths rely on it), but the
+donated array is *deleted* on the caller's side: any later read raises
+``RuntimeError: Array has been deleted`` — again only at run time, and
+only on the donating execution path. ``serve.engine`` documents this
+contract ("self.params MUST be rebound"); this rule enforces the
+caller side of it.
+
+Per function scope (linear, textual order — loop back-edges are not
+modeled, an under-approximation that never false-positives):
+
+* ``g = jax.jit(f, donate_argnums=(0, 3))`` binds ``g`` as a donating
+  callable with those positions (``donate_argnames`` binds keyword
+  names); a direct ``jax.jit(f, donate_argnums=...)(x)`` call is
+  handled the same way.
+* at each call ``g(a, b, ...)``, plain-name arguments in donated
+  positions are marked *consumed*;
+* a later ``Load`` of a consumed name flags, unless the name was
+  re-bound first (``a = g(a, ...)`` is the idiomatic safe form: the
+  store lands after the call).
+
+Attribute targets (``self.params``) are skipped — rebinding through
+``self`` is the engine's documented pattern and instance state is
+beyond a linear scan.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Module, Project
+
+_JIT_NAMES = {"jax.jit", "jax.pmap", "pjit"}
+
+
+@dataclasses.dataclass
+class _Donator:
+    argnums: tuple[int, ...]
+    argnames: tuple[str, ...]
+
+
+class Rule:
+    id = "CIM501"
+    summary = (
+        "read of a variable after it was passed in a donated argument "
+        "position (buffer deleted by XLA donation)"
+    )
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for name in sorted(project.modules):
+            mod = project.modules[name]
+            scopes: list[tuple[str, list[ast.stmt]]] = [
+                (mod.name, mod.tree.body)
+            ]
+            for qual, info in mod.functions.items():
+                body = info.node.body
+                if isinstance(body, list):
+                    scopes.append((qual, body))
+            for symbol, body in scopes:
+                yield from _scan_scope(symbol, body, mod)
+
+
+def _scan_scope(
+    symbol: str, body: list[ast.stmt], mod: Module
+) -> Iterator[Finding]:
+    donators: dict[str, _Donator] = {}
+    # (line, col, rank) ordering: a load at the consume site itself
+    # (the donated argument expression) sorts before the consume, and
+    # stores use statement END position so `x = g(x)` re-binds *after*
+    # the consume it contains.
+    events: list[tuple[tuple[int, int, int], str, str, ast.AST]] = []
+
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Its body is a separate scope entry; scanning it here too
+            # would double-report every finding.
+            continue
+        for node in _walk_no_nested(stmt):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+                isinstance(node.targets[0], ast.Name)
+            ):
+                don = _donator_from(node.value, mod)
+                if don is not None:
+                    donators[node.targets[0].id] = don
+            if isinstance(node, ast.Call):
+                for name, pos in _consumed_names(node, mod, donators):
+                    events.append((pos + (1,), "consume", name, node))
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, ast.Load):
+                    events.append((
+                        (node.lineno, node.col_offset, 0), "load",
+                        node.id, node,
+                    ))
+                elif isinstance(node.ctx, (ast.Store, ast.Del)):
+                    parent_end = _store_pos(stmt, node)
+                    events.append((parent_end + (2,), "store", node.id,
+                                   node))
+
+    events.sort(key=lambda e: e[0])
+    consumed: dict[str, tuple[int, int]] = {}
+    for pos, kind, name, node in events:
+        if kind == "consume":
+            consumed[name] = pos
+        elif kind == "store":
+            consumed.pop(name, None)
+        elif kind == "load" and name in consumed:
+            cline = consumed[name][0]
+            yield Finding(
+                rule=Rule.id,
+                path="",
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"'{name}' is read after being donated at line "
+                    f"{cline} — the buffer is deleted by XLA donation "
+                    "(rebind the name from the call's result, or drop "
+                    "donation for this argument)"
+                ),
+                symbol=symbol,
+            )
+            consumed.pop(name, None)  # one report per consume
+
+
+def _walk_no_nested(node: ast.AST) -> Iterator[ast.AST]:
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(
+            child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        yield from _walk_no_nested(child)
+
+
+def _store_pos(stmt: ast.stmt, node: ast.Name) -> tuple[int, int]:
+    # Assignment targets take effect after the RHS runs: order the
+    # store at the statement's end so same-line consumes come first.
+    end_line = getattr(stmt, "end_lineno", node.lineno) or node.lineno
+    end_col = getattr(stmt, "end_col_offset", node.col_offset) or 0
+    return (end_line, end_col + 1)
+
+
+def _donator_from(node: ast.AST, mod: Module) -> _Donator | None:
+    """``jax.jit(f, donate_argnums=...)`` -> its donated positions."""
+    if not isinstance(node, ast.Call):
+        return None
+    resolved = mod.resolve(node.func)
+    if resolved not in _JIT_NAMES and not (
+        resolved is not None and resolved.endswith(".pjit")
+    ):
+        return None
+    argnums: tuple[int, ...] = ()
+    argnames: tuple[str, ...] = ()
+    for kw in node.keywords:
+        if kw.arg == "donate_argnums":
+            argnums = _int_tuple(kw.value)
+        elif kw.arg == "donate_argnames":
+            argnames = _str_tuple(kw.value)
+    if not argnums and not argnames:
+        return None
+    return _Donator(argnums=argnums, argnames=argnames)
+
+
+def _int_tuple(node: ast.AST) -> tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+def _str_tuple(node: ast.AST) -> tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        )
+    return ()
+
+
+def _consumed_names(
+    call: ast.Call, mod: Module, donators: dict[str, _Donator]
+) -> Iterator[tuple[str, tuple[int, int]]]:
+    don: _Donator | None = None
+    if isinstance(call.func, ast.Name):
+        don = donators.get(call.func.id)
+    if don is None:
+        # Direct form: jax.jit(f, donate_argnums=...)(x, y)
+        don = _donator_from(call.func, mod)
+    if don is None:
+        return
+    for i in don.argnums:
+        if i < len(call.args) and isinstance(call.args[i], ast.Name):
+            arg = call.args[i]
+            yield arg.id, (arg.lineno, arg.col_offset)
+    for kw in call.keywords:
+        if kw.arg in don.argnames and isinstance(kw.value, ast.Name):
+            yield kw.value.id, (kw.value.lineno, kw.value.col_offset)

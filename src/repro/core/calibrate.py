@@ -1256,7 +1256,7 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
         (lc.variant, lc.spec) for lc in result.layers.values()
     } | {("p8t", result.base)}
     table_cache: dict[tuple[str, MacroSpec], tuple[bool, Any]] = {}
-    for vname, spec in reachable:
+    for vname, spec in sorted(reachable, key=repr):
         var = variants_lib.get(vname)
         if not var.per_plane_adc:
             continue  # merged conversions execute via matmul_int

@@ -478,16 +478,16 @@ def run_cell(
         "n_params": cfg.param_count(),
         "n_params_active": cfg.active_param_count(),
     }
-    t0 = time.time()
+    t0 = time.time()  # noqa: CIM201 timing
     try:
         fn, args, in_sh, out_sh, jkw = builder(cfg, shape, mesh)
         with mesh:
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              **jkw)
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.time() - t0  # noqa: CIM201 timing
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.time() - t0 - t_lower  # noqa: CIM201 timing
             ma = compiled.memory_analysis()
             cost = compiled.cost_analysis()
             hlo = compiled.as_text()
@@ -518,7 +518,7 @@ def run_cell(
     except Exception as e:  # noqa: BLE001
         rec.update(status="fail", error=repr(e),
                    traceback=traceback.format_exc()[-4000:])
-    rec["wall_s"] = round(time.time() - t0, 1)
+    rec["wall_s"] = round(time.time() - t0, 1)  # noqa: CIM201 timing
     return rec
 
 
@@ -582,7 +582,9 @@ def main() -> None:
                            serve_quant=args.serve_quant,
                            kv_cache_dtype=args.kv_cache_dtype)
             existing[key] = rec
-            out_path.write_text(json.dumps(existing, indent=1))
+            out_path.write_text(
+                json.dumps(existing, indent=1, sort_keys=True)
+            )
             status = rec["status"]
             mem = rec.get("memory", {})
             print(
