@@ -34,9 +34,48 @@ fi
 # regressions the unit tests abstract over. The `kernels` bench also
 # enforces the no-silent-fallback guard — it RAISES (failing this
 # script) if an explicit Pallas request for any variant with a
-# registered Pallas kernel ever resolves to the jnp scan.
-PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+# registered Pallas kernel ever resolves to the jnp scan — and
+# measures the tracked headline (calibrated-analog vs int8-exact
+# decode at the LM decode cell) into a throwaway JSON, gated below
+# against the committed BENCH_kernels.json baseline: a fresh ratio
+# more than 20% above the committed one fails the build. The ratio
+# (not raw microseconds) is compared so a slower CI box cancels out
+# of both sides.
+bench_tmp="$(mktemp -d)"
+trap 'rm -rf "${bench_tmp}"' EXIT
+REPRO_BENCH_OUT="${bench_tmp}/BENCH_kernels.json" \
+    PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/run.py --only plan,variants,kernels --smoke
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - "$bench_tmp" <<'PYEOF'
+import json, pathlib, sys
+fresh = json.loads(
+    (pathlib.Path(sys.argv[1]) / "BENCH_kernels.json").read_text()
+)["headline"]
+base = json.loads(pathlib.Path("BENCH_kernels.json").read_text())["headline"]
+limit = base["ratio"] * 1.2
+print(
+    f"headline analog/exact ratio: fresh={fresh['ratio']:.3f} "
+    f"committed={base['ratio']:.3f} limit={limit:.3f}"
+)
+if fresh["cell"] != base["cell"]:
+    sys.exit(f"FAIL: headline cell changed {base['cell']} -> {fresh['cell']}")
+if fresh["ratio"] > limit:
+    sys.exit(
+        f"FAIL: headline ratio regressed >20% vs committed "
+        f"BENCH_kernels.json ({fresh['ratio']:.3f} > {limit:.3f}); "
+        "if the regression is intended, re-measure with "
+        "`python benchmarks/run.py --only kernels` and commit the "
+        "refreshed baseline"
+    )
+PYEOF
+# When BENCH_ARTIFACT_DIR is set (CI does this), keep the fresh bench
+# JSON past the tempdir cleanup so the workflow can upload it as an
+# artifact — the per-PR perf trajectory next to the committed baseline.
+if [ -n "${BENCH_ARTIFACT_DIR:-}" ]; then
+    mkdir -p "${BENCH_ARTIFACT_DIR}"
+    cp "${bench_tmp}/BENCH_kernels.json" \
+        "${BENCH_ARTIFACT_DIR}/BENCH_kernels.json"
+fi
 # Pareto/refinement smoke: tiny grid + stub eval exercises the
 # cutoff/vdd sweep axes, the energy cost model, greedy refinement and
 # the byte-deterministic report writer; the full resnet refinement
@@ -49,7 +88,7 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
 # feasibility validation, a 2-point resumable run into a throwaway
 # dir, and the analysis pass rendering the versioned pareto report.
 sweep_tmp="$(mktemp -d)"
-trap 'rm -rf "${sweep_tmp}"' EXIT
+trap 'rm -rf "${sweep_tmp}" "${bench_tmp}"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.sweep configs/sweeps/ci_smoke.json --dry-run \
     --out "${sweep_tmp}"

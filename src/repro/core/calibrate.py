@@ -1238,8 +1238,10 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
 
     Plans whose planes were grouped at a different ``rows_active``
     than the calibrated one are *regrouped* (``engine.regroup_planes``
-    — pure reshape/pad), never silently dropped to the unplanned
-    slicing path. Hardware-noise injection follows the *execution
+    — pure reshape/pad; in the dispatch path this happens inside the
+    dispatcher, and only when the chosen implementation consumes
+    planes), never silently dropped to the unplanned slicing path.
+    Hardware-noise injection follows the *execution
     policy* (``policy.cim.noisy`` + a key), not the calibration base:
     calibration always scores under noise, but whether the deployed
     run is noisy is the caller's choice.
@@ -1283,22 +1285,32 @@ def calibrated_backend(result: CalibrationResult) -> engine.BackendFn:
                 f"weight_bits={plan.weight_bits}"
             )
         run_spec = spec.replace(noisy=cfg.noisy)
-        planes = plan.planes
-        if planes is not None and planes.shape[-2] != spec.rows_active:
-            # Plan grouped for a different row count: reflow the
-            # grouped layout instead of dropping to unplanned slicing.
-            planes = engine.regroup_planes(
-                planes, plan.k, spec.rows_active
-            )
         var = variants_lib.get(vname)
         if var.per_plane_adc:
             is_default, table = table_cache[(vname, spec)]
             if not is_default:
+                # Calibration-specific LUT transfer: consumes the
+                # grouped planes directly, so a rows_active mismatch
+                # reflows here (pure reshape/pad) — never silently
+                # dropped to the unplanned slicing path.
+                planes = plan.planes
+                if (
+                    planes is not None
+                    and planes.shape[-2] != spec.rows_active
+                ):
+                    planes = engine.regroup_planes(
+                        planes, plan.k, spec.rows_active
+                    )
                 return _lut_matmul_int(x_codes, plan.codes_i32, run_spec,
                                        table, key, planes=planes)
+        # Dispatch normalizes plane grouping itself, and only when the
+        # chosen implementation actually consumes planes — the planned
+        # operands (narrow codes, packed planes, spread slots) pass
+        # through untouched so nothing weight-side runs per call.
         return dispatch.dispatch(
-            x_codes, plan.codes_i32, run_spec,
-            variant=vname, key=key, planes=planes,
+            x_codes, plan.codes, run_spec,
+            variant=vname, key=key, planes=plan.planes,
+            slots=plan.slots,
         )
 
     return engine.quantized_backend(_int_fn)

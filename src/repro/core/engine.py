@@ -77,7 +77,7 @@ class CIMPolicyLike(Protocol):
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("codes", "scale", "colsum", "w", "planes"),
+    data_fields=("codes", "scale", "colsum", "w", "planes", "slots"),
     meta_fields=("weight_bits",),
 )
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +104,13 @@ class PlannedWeights:
                    tile at a time inside its scan.
                Kept when the behavioral backend will run repeatedly on
                this plan.
+      slots:   [G, rows_active, S*N] f32 spread-slot planes
+               (``quant.spread_slots``): ``per_slot`` bit planes per
+               f32 at an exact-integer stride, the operand of the
+               decode-shape "slots" dispatch backend. Grouping is baked
+               into the packed values, so unlike ``planes`` this form
+               cannot be regrouped — a spec with a different
+               ``rows_active`` simply doesn't use it.
       weight_bits: static weight precision (pytree metadata).
     """
 
@@ -112,6 +119,7 @@ class PlannedWeights:
     colsum: Any = None
     w: Any = None
     planes: Any = None
+    slots: Any = None
     weight_bits: int = 8
 
     # -- convenience views -------------------------------------------------
@@ -149,6 +157,34 @@ PACK_PLANES_MIN_K = 4096
 
 def _pack_planes_default(k: int, cfg: CIMConfig) -> bool:
     return k >= PACK_PLANES_MIN_K and cfg.weight_bits <= 8
+
+
+# Spread-slot operands default on up to this many weights per layer:
+# the form costs 4 * n_slots (typically 12) bytes per weight, so it is
+# built for the decode-critical attention/projection layers and skipped
+# for the very largest matrices unless explicitly requested.
+SLOTS_MAX_ELEMS = 1 << 22
+
+
+def _with_slots_default(
+    k: int, n: int, cfg: CIMConfig, with_planes: bool,
+    rows: int | None = None,
+) -> bool:
+    return (
+        with_planes
+        and k * n <= SLOTS_MAX_ELEMS
+        and quant.slot_spec(
+            rows or cfg.rows_active, cfg.act_bits, cfg.weight_bits
+        ) is not None
+    )
+
+
+def _slots_shape(
+    k: int, n: int, cfg: CIMConfig, rows: int | None = None
+) -> tuple[int, int, int]:
+    rows = rows or cfg.rows_active
+    ss = quant.slot_spec(rows, cfg.act_bits, cfg.weight_bits)
+    return (-(-k // rows), rows, ss.n_slots * n)
 
 
 def _grouped_planes_shape(
@@ -234,6 +270,7 @@ def plan_weights(
     keep_fp: bool | None = None,
     with_planes: bool | None = None,
     pack_planes: bool | None = None,
+    with_slots: bool | None = None,
     group_rows: int | None = None,
 ) -> PlannedWeights:
     """Precompute the weight-stationary state for ``execute``.
@@ -259,6 +296,12 @@ def plan_weights(
         instead of unpacked [G, B, rows, N] int8. Default: packed for
         large-K layers (K >= PACK_PLANES_MIN_K). Execution output is
         identical either way (parity-tested).
+      with_slots: also precompute the spread-slot operand
+        (``quant.spread_slots``) consumed by the decode-shape "slots"
+        dispatch backend. Default: whenever planes are kept, the
+        packing is feasible at the operating point, and the layer has
+        at most SLOTS_MAX_ELEMS weights (the form costs ~12 bytes per
+        weight). Pass True/False to force.
       group_rows: group the planes at this row count instead of
         ``cfg.rows_active`` — used by ``plan_params(calibration=...)``
         to pre-group each layer at its *calibrated* ``rows_active`` so
@@ -290,12 +333,29 @@ def plan_weights(
         planes = _grouped_planes(
             qw.codes, cfg, packed=pack_planes, rows=group_rows
         )
+    slots = None
+    if with_slots is None:
+        with_slots = qw.codes.ndim == 2 and _with_slots_default(
+            qw.codes.shape[-2], qw.codes.shape[-1], cfg, with_planes,
+            rows=group_rows,
+        )
+    if with_slots:
+        if qw.codes.ndim != 2:
+            raise ValueError(
+                "with_slots requires a 2-D [K, N] weight; got shape "
+                f"{qw.codes.shape}"
+            )
+        slots = quant.spread_slots(
+            qw.codes, group_rows or cfg.rows_active,
+            cfg.act_bits, bits,
+        )
     return PlannedWeights(
         codes=codes,
         scale=qw.scale.astype(jnp.float32),
         colsum=colsum,
         w=w if keep_fp else None,
         planes=planes,
+        slots=slots,
         weight_bits=bits,
     )
 
@@ -390,20 +450,17 @@ def _exact_int(x_codes, plan, cfg, key):
 
 def _behavioral_int(x_codes, plan, cfg, key):
     # Route through the variant-aware dispatch table: the backend
-    # (scan / ref / pallas) and its block sizes resolve per shape from
-    # the autotune cache, falling back to the heuristics (noise -> the
-    # scan transfer; otherwise scan off-TPU) that reproduce the
-    # pre-dispatch behavior exactly.
+    # (scan / ref / slots / pallas) and its block sizes resolve per
+    # shape from the autotune cache, falling back to the heuristics
+    # (noise -> the scan transfer; otherwise scan off-TPU). Planned
+    # operands pass through untouched — dispatch normalizes grouping
+    # only when the chosen implementation actually consumes them, so
+    # nothing weight-side runs on the hot path.
     from repro.kernels import dispatch  # lazy: optional pallas dep
 
-    planes = plan.planes
-    if planes is not None and planes.shape[-2] != cfg.rows_active:
-        # Plan grouped for a different row count (e.g. a calibration-
-        # grouped plan executed under a plain behavioral policy):
-        # reflow rather than fail deep inside the kernel.
-        planes = regroup_planes(planes, plan.k, cfg.rows_active)
     return dispatch.dispatch(
-        x_codes, plan.codes_i32, cfg, key=key, planes=planes
+        x_codes, plan.codes, cfg, key=key, planes=plan.planes,
+        slots=plan.slots,
     )
 
 
@@ -412,7 +469,7 @@ def _pallas_int(x_codes, plan, cfg, key):
     from repro.kernels import dispatch  # lazy: optional dep
 
     return dispatch.dispatch(
-        x_codes, plan.codes_i32, cfg, backend="pallas", planes=plan.planes
+        x_codes, plan.codes, cfg, backend="pallas", planes=plan.planes
     )
 
 
@@ -547,12 +604,21 @@ def _plan_sds_leaf(
             ),
             jnp.uint8 if packed else jnp.int8,
         )
+    slots = None
+    if len(v.shape) == 2 and _with_slots_default(
+        v.shape[-2], v.shape[-1], cfg, with_planes, rows=group_rows
+    ):
+        slots = jax.ShapeDtypeStruct(
+            _slots_shape(v.shape[-2], v.shape[-1], cfg, rows=group_rows),
+            jnp.float32,
+        )
     return PlannedWeights(
         codes=jax.ShapeDtypeStruct(v.shape, cfg.codes_dtype),
         scale=jax.ShapeDtypeStruct(epi, jnp.float32),
         colsum=jax.ShapeDtypeStruct(epi, jnp.float32),
         w=jax.ShapeDtypeStruct(v.shape, v.dtype) if keep_fp else None,
         planes=planes,
+        slots=slots,
         weight_bits=cfg.weight_bits,
     )
 

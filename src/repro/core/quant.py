@@ -157,6 +157,88 @@ def plane_signs(weight_bits: int) -> jax.Array:
     return w.at[weight_bits - 1].multiply(-1)
 
 
+# ---------------------------------------------------------------------------
+# Spread-slot plane packing (the decode-shape fast path's operand form)
+# ---------------------------------------------------------------------------
+
+# f32 mantissa width: integer dot products stay exact below 2**24.
+_F32_EXACT_BITS = 24
+
+
+class SlotSpec(NamedTuple):
+    """Geometry of the spread-slot packing at one operating point.
+
+    ``stride`` is the per-plane field width (next power of two above
+    the largest possible group pMAC), ``per_slot`` how many bit planes
+    share one f32 slot, ``n_slots`` how many slots cover weight_bits.
+    """
+
+    stride: int
+    per_slot: int
+    n_slots: int
+
+
+def slot_spec(
+    rows: int, act_bits: int, weight_bits: int
+) -> SlotSpec | None:
+    """Packing geometry for spread slots, or None when infeasible.
+
+    A group pMAC of one bit plane is an integer in
+    [0, rows * (2**act_bits - 1)]; ``per_slot`` planes are packed into
+    one f32 as sum_j stride**j * plane_j, sized so every partial sum of
+    the contraction stays below 2**24 (exact in the f32 mantissa). At
+    the paper point (16 rows, 4-bit DAC) pMAC <= 240, stride = 256 and
+    3 planes share a slot — 12 bytes of weight traffic per 8 planes
+    instead of the 32 an unpacked f32 plane tensor moves.
+    """
+    pmac_max = rows * ((1 << act_bits) - 1)
+    field_bits = max(1, pmac_max.bit_length())
+    per_slot = _F32_EXACT_BITS // field_bits
+    if per_slot < 1:
+        return None
+    per_slot = min(per_slot, weight_bits)
+    n_slots = -(-weight_bits // per_slot)
+    return SlotSpec(1 << field_bits, per_slot, n_slots)
+
+
+def spread_slots(
+    codes: jax.Array, rows: int, act_bits: int, weight_bits: int
+) -> jax.Array:
+    """[K, N] signed codes -> spread-slot planes [G, rows, S*N] f32.
+
+    The weight-stationary operand of the "slots" kernel backend
+    (kernels.ref): each f32 element packs ``per_slot`` bit planes of
+    one weight at stride ``stride`` (see :func:`slot_spec`), so ONE
+    grouped contraction yields every per-plane partial MAC — the
+    consumer recovers them exactly with floor/multiply field
+    extraction. K is zero-padded to whole ``rows`` groups (plane 0
+    packs to 0, contributing nothing). Slot s occupies columns
+    [s*N, (s+1)*N) of the last axis.
+    """
+    spec = slot_spec(rows, act_bits, weight_bits)
+    if spec is None:
+        raise ValueError(
+            f"spread slots infeasible: a {rows}-row group pMAC at "
+            f"act_bits={act_bits} overflows the f32 mantissa"
+        )
+    k, n = codes.shape
+    g = -(-k // rows)
+    planes = bitslice_weights(codes, weight_bits, dtype=jnp.int8)
+    planes = jnp.pad(planes, ((0, 0), (0, g * rows - k), (0, 0)))
+    planes = planes.astype(jnp.float32)  # [B, G*rows, N]
+    slots = []
+    for s in range(spec.n_slots):
+        lo = s * spec.per_slot
+        acc = planes[lo]
+        for j in range(1, min(spec.per_slot, weight_bits - lo)):
+            # stride is a static Python int (slot_spec geometry), so the
+            # scalar weight folds at trace time — never a tracer readback
+            acc = acc + planes[lo + j] * (spec.stride ** j)
+        slots.append(acc)
+    out = jnp.stack(slots, axis=1)  # [G*rows, S, N]
+    return out.reshape(g, rows, spec.n_slots * n)
+
+
 def unslice_weights(planes: jax.Array, weight_bits: int) -> jax.Array:
     """Inverse of bitslice_weights (digital shift-add identity)."""
     signs = plane_signs(weight_bits).reshape(

@@ -15,11 +15,13 @@ Cache file format (version 1)::
     {
       "version": 1,
       "arch": "cpu",
+      "sweep_version": 3,
       "entries": {
-        "p8t/m8_k1024_n1024":  {"backend": "ref",
-                                "block": null, "us": 812.4},
+        "p8t/m8_k1024_n1024":  {"backend": "ref", "block": null,
+                                "us": 812.4, "swept_at": 3},
         "p8t/m128_k1024_n1024": {"backend": "pallas",
-                                 "block": [128, 128, 128], "us": 95.1}
+                                 "block": [128, 128, 128],
+                                 "us": 95.1, "swept_at": 2}
       }
     }
 
@@ -28,6 +30,13 @@ cells of :func:`dispatch.shape_cell`; ``block`` is the pinned Pallas
 tiling (null for jnp backends). Entries are written sorted, so the
 same sweep produces byte-identical files (round-trip determinism is
 property-tested).
+
+``sweep_version`` is a monotone counter bumped by every merging
+:func:`autotune` run, and each entry records the ``swept_at`` version
+that last measured it — NOT a wall-clock stamp (artifact determinism,
+CIM201), but enough for :func:`stale_entries` to flag cells a partial
+re-sweep left behind (surfaced by ``repro.sweep``'s ``--analyze``
+autotune renderer).
 
 Timing is injectable (``measure=``) so tests pin winners with a
 deterministic proxy; the default measures best-of-``reps`` wall time
@@ -65,6 +74,36 @@ PALLAS_BLOCKS: tuple[tuple[int, int, int], ...] = (
     (32, 64, 128),
 )
 
+# Small-bm candidates for the decode shapes (see decode_blocks).
+DECODE_BMS: tuple[int, ...] = (1, 8, 16)
+
+
+def decode_blocks(
+    rows: int, m: int | None = None, *, bn: int = 128
+) -> tuple[tuple[int, int, int], ...]:
+    """Decode-shape Pallas tiling candidates.
+
+    The default 128-row M tiles pad an m=1 decode step to 128 rows and
+    burn 128x the FLOPs; these candidates pair small bm values
+    (``DECODE_BMS``, dropped above the next power of two of ``m`` so
+    an m=1 sweep times only bm=1) with bk values aligned to the
+    calibration's ``rows_active`` group (the kernel requires
+    rows | bk, and a rows-aligned bk avoids the dispatch adapter's
+    round-down losing contraction depth for non-power-of-two rows).
+    """
+    cap = None
+    if m is not None:
+        cap = 1
+        while cap < m and cap < max(DECODE_BMS):
+            cap *= 2
+    bks = sorted({max(rows, 128 - 128 % rows), 8 * rows})
+    return tuple(
+        (bm, bn, bk)
+        for bm in DECODE_BMS
+        if cap is None or bm <= cap
+        for bk in bks
+    )
+
 Candidate = tuple[str, tuple[int, int, int] | None]
 # measure(candidate, run) -> seconds for one call; `run` executes the
 # (already warmed/compiled) candidate once, blocking on the result.
@@ -87,17 +126,24 @@ def cache_path(arch: str) -> pathlib.Path:
 
 @dataclasses.dataclass(frozen=True)
 class Winner:
-    """The pinned choice for one (variant, shape cell)."""
+    """The pinned choice for one (variant, shape cell).
+
+    ``swept_at`` is the cache's ``sweep_version`` when this entry was
+    last measured (0 = predates versioned sweeps); it is bookkeeping
+    for staleness reporting and does not affect dispatch.
+    """
 
     backend: str
     block: tuple[int, int, int] | None
     us: float
+    swept_at: int = 0
 
     def to_json(self) -> dict:
         return {
             "backend": self.backend,
             "block": list(self.block) if self.block else None,
             "us": self.us,
+            "swept_at": self.swept_at,
         }
 
     @classmethod
@@ -107,6 +153,7 @@ class Winner:
             backend=d["backend"],
             block=tuple(block) if block else None,
             us=float(d.get("us", 0.0)),
+            swept_at=int(d.get("swept_at", 0)),
         )
 
 
@@ -116,10 +163,16 @@ def cell_id(variant: str, cell: tuple[int, int, int]) -> str:
 
 @dataclasses.dataclass
 class TuningCache:
-    """The per-arch winner table, JSON round-trippable."""
+    """The per-arch winner table, JSON round-trippable.
+
+    ``sweep_version`` counts merging :func:`autotune` runs; entries
+    whose ``swept_at`` lags it were inherited from an earlier sweep
+    (see :func:`stale_entries`).
+    """
 
     arch: str
     entries: dict[str, Winner] = dataclasses.field(default_factory=dict)
+    sweep_version: int = 0
 
     def lookup(
         self, variant: str, cell: tuple[int, int, int]
@@ -135,6 +188,7 @@ class TuningCache:
         return {
             "version": CACHE_VERSION,
             "arch": self.arch,
+            "sweep_version": self.sweep_version,
             "entries": {
                 k: self.entries[k].to_json() for k in sorted(self.entries)
             },
@@ -152,6 +206,7 @@ class TuningCache:
             entries={
                 k: Winner.from_json(v) for k, v in d["entries"].items()
             },
+            sweep_version=int(d.get("sweep_version", 0)),
         )
 
     def save(self, path: pathlib.Path | str | None = None) -> pathlib.Path:
@@ -243,21 +298,46 @@ def lookup(variant: str, cell: tuple[int, int, int]) -> Winner | None:
     return None if cache is None else cache.lookup(variant, cell)
 
 
+def stale_entries(cache: TuningCache) -> tuple[str, ...]:
+    """Entry ids whose winner predates the cache's latest sweep.
+
+    A partial re-sweep (``autotune(merge=True)`` over a subset of
+    cells) bumps ``sweep_version`` and stamps only the swept cells;
+    everything it inherited keeps its old ``swept_at`` and shows up
+    here — including ``swept_at=0`` entries from pre-versioning
+    caches, which is exactly the single-entry-cache staleness this
+    reporting exists to surface.
+    """
+    return tuple(sorted(
+        k for k, w in cache.entries.items()
+        if w.swept_at < cache.sweep_version
+    ))
+
+
 # ---------------------------------------------------------------------------
 # Sweeping
 # ---------------------------------------------------------------------------
 
 
 def cache_from_records(
-    arch: str, records: Iterable[Mapping]
+    arch: str, records: Iterable[Mapping],
+    prev: TuningCache | None = None,
 ) -> TuningCache:
     """A TuningCache from measured-winner records (the sweep harness).
 
     Each record carries ``variant``, ``cell`` ([m, k, n] tuning cell),
     ``backend``, ``block`` and ``us``. Later records win a shared
-    cell, matching :func:`autotune`'s last-sweep-wins merge.
+    cell, matching :func:`autotune`'s last-sweep-wins merge. ``prev``
+    (e.g. the committed per-arch cache) seeds inherited entries at
+    their old ``swept_at``; the fresh records stamp the bumped
+    ``sweep_version``, so :func:`stale_entries` of the result is the
+    not-re-swept remainder.
     """
     cache = TuningCache(arch=arch)
+    if prev is not None:
+        cache.entries.update(prev.entries)
+        cache.sweep_version = prev.sweep_version
+    cache.sweep_version += 1
     for r in records:
         cache.put(
             r["variant"], tuple(int(d) for d in r["cell"]),
@@ -265,6 +345,7 @@ def cache_from_records(
                 backend=r["backend"],
                 block=tuple(r["block"]) if r.get("block") else None,
                 us=float(r.get("us", 0.0)),
+                swept_at=cache.sweep_version,
             ),
         )
     return cache
@@ -275,16 +356,26 @@ def default_candidates(
     *,
     blocks: Sequence[tuple[int, int, int]] = PALLAS_BLOCKS,
     include_pallas: bool | None = None,
+    rows: int | None = None,
+    m: int | None = None,
 ) -> tuple[Candidate, ...]:
     """Candidate (backend, block) pairs for one variant, stable order.
 
     ``include_pallas`` defaults to native-lowering only (TPU): in
     interpret mode the kernel is a correctness vehicle, and timing it
     would never pin it anyway — skipping keeps sweeps fast on CPU.
-    Pass True to sweep it regardless.
+    Pass True to sweep it regardless. With ``rows`` (the operating
+    point's ``rows_active``) the Pallas block list extends with the
+    :func:`decode_blocks` small-bm / rows-aligned-bk candidates for
+    the sweep's ``m``.
     """
     if include_pallas is None:
         include_pallas = jax.default_backend() == "tpu"
+    if rows is not None:
+        seen = set(blocks)
+        blocks = tuple(blocks) + tuple(
+            b for b in decode_blocks(rows, m) if b not in seen
+        )
     cands: list[Candidate] = []
     for backend in dispatch.backends_for(variant):
         if dispatch.lookup(variant, backend) is None:
@@ -327,32 +418,60 @@ def sweep_shape(
     Deterministic given a deterministic ``measure``: candidates are
     evaluated in their stable enumeration order and ties keep the
     earlier candidate.
+
+    Every candidate is timed against the operands a *served* plan
+    provides — narrow integer codes plus the planned packed planes and
+    spread-slot tensors — so winners reflect the traffic the serving
+    path actually pays (and plan-dependent backends like "slots" are
+    sweepable at all; infeasible ones skip, never win).
     """
     spec = as_spec(spec) if spec is not None else MacroSpec()
     spec = spec.replace(noisy=False)
     if candidates is None:
-        candidates = default_candidates(variant)
+        candidates = default_candidates(
+            variant, rows=spec.rows_active, m=m
+        )
     if measure is None:
         measure = _wall_measure(reps)
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.integers(0, spec.act_levels, (m, k)), jnp.int32)
     lo = -(1 << (spec.weight_bits - 1))
     hi = 1 << (spec.weight_bits - 1)
-    w = jnp.asarray(rng.integers(lo, hi, (k, n)), jnp.int32)
+    cdtype = jnp.int8 if spec.weight_bits <= 8 else jnp.int32
+    w = jnp.asarray(rng.integers(lo, hi, (k, n)), cdtype)
+
+    from repro.core import engine  # noqa: PLC0415 - lazy, no cycle
+    from repro.core import quant  # noqa: PLC0415
+
+    planes = None
+    if spec.weight_bits <= 8:
+        planes = engine._grouped_planes(
+            w.astype(jnp.int32), spec, packed=True
+        )
+    try:
+        slots = quant.spread_slots(
+            w.astype(jnp.int32), spec.rows_active, spec.act_bits,
+            spec.weight_bits,
+        )
+    except ValueError:  # infeasible operating point for slot packing
+        slots = None
 
     best: Winner | None = None
     for backend, block in candidates:
         fn = jax.jit(
-            lambda xx, ww, _b=backend, _blk=block: dispatch.dispatch(
-                xx, ww, spec, variant=variant, backend=_b, block=_blk
+            lambda xx, ww, pp, ss, _b=backend, _blk=block:
+            dispatch.dispatch(
+                xx, ww, spec, variant=variant, backend=_b, block=_blk,
+                planes=pp, slots=ss,
             )
         )
         try:
-            jax.block_until_ready(fn(x, w))  # compile + feasibility
+            jax.block_until_ready(fn(x, w, planes, slots))
         except Exception:  # noqa: BLE001 - infeasible candidate (depth guard...)
             continue
         secs = float(measure(
-            (backend, block), lambda: jax.block_until_ready(fn(x, w))
+            (backend, block),
+            lambda: jax.block_until_ready(fn(x, w, planes, slots)),
         ))
         if best is None or secs * 1e6 < best.us:
             best = Winner(backend=backend, block=block, us=secs * 1e6)
@@ -385,7 +504,10 @@ def autotune(
     consults in this process. ``merge`` (default) seeds the result
     with the previously persisted entries for this arch, so a partial
     re-sweep updates only the swept cells instead of discarding every
-    other pinned winner; pass ``merge=False`` to start clean.
+    other pinned winner; pass ``merge=False`` to start clean. Either
+    way ``sweep_version`` bumps and the freshly swept cells are
+    stamped with it — inherited cells keep their old ``swept_at`` and
+    show up in :func:`stale_entries`.
     """
     arch = arch or jax.default_backend()
     shapes = tuple(shapes)  # generators must survive the variant loop
@@ -394,12 +516,15 @@ def autotune(
         prev = TuningCache.load(arch=arch, path=path)
         if prev is not None:
             cache.entries.update(prev.entries)
+            cache.sweep_version = prev.sweep_version
+    cache.sweep_version += 1
     for variant in variants:
         for (m, k, n) in shapes:
             cell = dispatch.shape_cell(m, k, n)
+            win = sweep_shape(variant, spec, m, k, n, **sweep_kw)
             cache.put(
                 variant, cell,
-                sweep_shape(variant, spec, m, k, n, **sweep_kw),
+                dataclasses.replace(win, swept_at=cache.sweep_version),
             )
     if save:
         cache.save(path)

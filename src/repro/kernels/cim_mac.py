@@ -18,8 +18,14 @@ formulation pays.
 Tiling (BlockSpec):
   grid = (M/bm, N/bn, K/bk), k innermost ("arbitrary" semantics so the
   output tile accumulates across k steps).
-  x tile   [bm, bk]   f32 activation codes (values 0..15, exact in f32)
-  w tile   [bk, bn]   i32 signed weight codes
+  x tile   [bm, bk]   activation codes in their NATIVE integer dtype
+                      (i32 from quantize_acts; widened to f32 inside
+                      the tile — the HBM->VMEM stream stays narrow)
+  w tile   [bk, bn]   weight codes: i8/i32 signed plan codes OR a
+                      plan's packed-plane bytes (u8) — the in-tile
+                      two's-complement unpack masks to the low
+                      ``weight_bits`` either way, so both storage
+                      forms lower through one kernel
   out tile [bm, bn]   f32 accumulated shift-add results
 
 Inside one k step the kernel unpacks the two's-complement planes of the
@@ -56,17 +62,24 @@ from repro.core.pipeline import MacroSpec
 def _grouped_plane_pmac(x, w, rows: int, weight_bits: int):
     """Shared kernel prologue: tile codes -> grouped plane partial-MACs.
 
-    x [bm, bk] f32 activation codes, w [bk, bn] i32 signed weight codes
-    -> pmac [gk, bm, B*bn] f32 (exact integers) plus (bm, bn, gk, b).
+    x [bm, bk] activation codes (any integer or f32 dtype), w [bk, bn]
+    weight codes in any storage form — signed i8/i32 plan codes or a
+    plan's packed-plane u8 bytes (whose low ``weight_bits`` ARE the
+    masked two's-complement code bits) -> pmac [gk, bm, B*bn] f32
+    (exact integers) plus (bm, bn, gk, b). Widening to f32/i32 happens
+    here, on the VMEM-resident tile, not on the HBM operands.
     """
     bm, bk = x.shape
     bn = w.shape[1]
     gk = bk // rows
     b = weight_bits
+    x = x.astype(jnp.float32)
 
     # Two's-complement plane expansion: [bk, bn] -> [bk, B, bn] 0/1.
+    # i8 codes sign-extend then mask to their low b bits; u8 packed
+    # bytes mask identically — one unpack serves both storage forms.
     mask = (1 << b) - 1
-    u = jnp.bitwise_and(w, mask)
+    u = jnp.bitwise_and(w.astype(jnp.int32), mask)
     shifts = jnp.arange(b, dtype=jnp.int32)[None, :, None]
     planes = jnp.bitwise_and(
         jnp.right_shift(u[:, None, :], shifts), 1
@@ -212,15 +225,18 @@ def _tiled_call(kernel, x_codes, w_codes, *, bm, bn, bk, interpret):
 
     Shapes are padded to tile multiples; K padding is benign for every
     transfer here (zero codes -> zero pMAC/merged value -> code 0 -> no
-    shift-add contribution).
+    shift-add contribution). Operands pad in their NATIVE dtypes — an
+    i8/u8 weight tensor streams 1 byte per weight into VMEM and the
+    kernel widens in-tile; the old up-front f32 cast moved 4x the
+    bytes every call.
     """
     m, k = x_codes.shape
     n = w_codes.shape[1]
     mp = -(-m // bm) * bm
     np_ = -(-n // bn) * bn
     kp = -(-k // bk) * bk
-    x_p = jnp.pad(x_codes.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
-    w_p = jnp.pad(w_codes.astype(jnp.int32), ((0, kp - k), (0, np_ - n)))
+    x_p = jnp.pad(x_codes, ((0, mp - m), (0, kp - k)))
+    w_p = jnp.pad(w_codes, ((0, kp - k), (0, np_ - n)))
 
     grid = (mp // bm, np_ // bn, kp // bk)
     kwargs = {}

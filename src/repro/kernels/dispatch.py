@@ -22,9 +22,17 @@ Built-in backends per variant:
   "ref"     the vectorized formulation (kernels.ref): a single fused
             einsum pair. Wins at decode shapes (small M) on CPU/GPU —
             the per-shape choice the autotuner discovers.
+  "slots"   the spread-slot formulation (kernels.ref): all bit planes
+            packed into exact f32 integer fields so ONE batched dot
+            yields every plane pMAC. Needs the plan's precomputed
+            ``slots`` operand (grouped at the executing rows_active —
+            it cannot be regrouped); the decode-shape (small M)
+            bandwidth winner.
   "pallas"  the fused Pallas kernel (kernels.cim_mac); native lowering
             on TPU, interpret mode elsewhere. Noiseless by design
-            (production inference path).
+            (production inference path). Consumes a plan's *packed*
+            planes directly (flatten-sliced to the [K, N] byte matrix,
+            unpacked per tile inside the kernel).
 
 Resolution order when no backend is requested explicitly:
 
@@ -40,9 +48,12 @@ assert exactly which implementation ran); an unknown key raises.
 
 An implementation is ``fn(x_codes, w_codes, spec, *, key=None,
 planes=None, block=None) -> [M, N] float32`` in integer-domain macro
-units — the ``matmul.cim_matmul_int`` contract. ``planes`` carries a
-plan's pre-grouped bit planes (ignored by kernels that re-slice the
-resident codes in-tile), ``block`` a (bm, bn, bk) Pallas tiling.
+units — the ``matmul.cim_matmul_int`` contract (plus ``slots=`` for
+implementations registered with ``supports_slots``). ``planes``
+carries a plan's pre-grouped bit planes (packed planes feed the Pallas
+kernels directly; the dispatcher regroups mismatched planes only for
+implementations that read them), ``slots`` a plan's spread-slot
+operand, ``block`` a (bm, bn, bk) Pallas tiling.
 """
 
 from __future__ import annotations
@@ -63,7 +74,7 @@ from repro.kernels import ref as ref_lib
 KernelFn = Callable[..., jax.Array]
 
 # Backend preference order (used by autotune candidate enumeration).
-KNOWN_BACKENDS = ("scan", "ref", "pallas")
+KNOWN_BACKENDS = ("scan", "ref", "slots", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +99,7 @@ class KernelImpl:
     fn: KernelFn
     supports_noise: bool = False
     supports_planes: bool = False
+    supports_slots: bool = False
     is_pallas: bool = False
 
 
@@ -110,6 +122,7 @@ def register_kernel(
     *,
     supports_noise: bool = False,
     supports_planes: bool = False,
+    supports_slots: bool = False,
     is_pallas: bool = False,
     overwrite: bool = False,
 ) -> KernelKey:
@@ -122,6 +135,7 @@ def register_kernel(
         fn=fn,
         supports_noise=supports_noise,
         supports_planes=supports_planes,
+        supports_slots=supports_slots,
         is_pallas=is_pallas,
     )
     return key
@@ -233,13 +247,34 @@ def _notify(res: Resolution) -> None:
         cb(res)
 
 
-def _heuristic_backend(variant: str, planes) -> str:
-    # A plan's pre-grouped planes are a weight-stationary optimization
-    # the Pallas kernels don't consume (they re-slice resident codes
-    # in-tile) — implicit routing keeps the plan semantics and takes
-    # the scan; the autotune cache can still deliberately pin pallas.
+def _has_backend(variant: str, backend: str) -> bool:
+    return any(
+        k.variant == variant and k.backend == backend for k in _TABLE
+    )
+
+
+# Largest M for which the heuristic (no tuned pin) takes the slots
+# formulation: its weight traffic is M-independent, so it wins the
+# bandwidth-bound decode shapes and loses to plain contractions once M
+# amortizes the weight reads. The autotune corpus overrides per cell.
+_SLOTS_HEURISTIC_MAX_M = 32
+
+
+def _heuristic_backend(variant: str, planes, slots, m: int) -> str:
+    # A plan's spread-slot operand exists exactly for the decode shapes
+    # — take it when M is small and no tuned pin says otherwise.
     if (
-        planes is None
+        slots is not None
+        and m <= _SLOTS_HEURISTIC_MAX_M
+        and _has_backend(variant, "slots")
+    ):
+        return "slots"
+    # Unpacked pre-grouped planes are a weight-stationary optimization
+    # the Pallas kernels don't consume (packed planes they do, via the
+    # flatten-slice path) — implicit routing keeps the plan semantics
+    # and takes the scan; the autotune cache can still pin pallas.
+    if (
+        (planes is None or planes.ndim == 3)
         and jax.default_backend() == "tpu"
         and has_pallas(variant)
     ):
@@ -256,22 +291,28 @@ def dispatch(
     backend: str | None = None,
     key: jax.Array | None = None,
     planes: jax.Array | None = None,
+    slots: jax.Array | None = None,
     block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
     """Route one integer-domain macro matmul to its implementation.
 
     Args:
       x_codes: [M, K] activation codes; w_codes: [K, N] signed weight
-        codes (a plan's ``codes_i32``).
+        codes (a plan's ``codes`` — any integer dtype).
       spec: the operating point (variant transfer constants).
       variant: macro family name (``core.variants`` registry).
       backend: explicit implementation choice; None = tuned/heuristic.
       key: PRNG key for hardware-noise injection — routes to the scan
         transfer unless the backend was requested explicitly (the
         Pallas/ref formulations are noiseless by design and ignore it).
-      planes: plan-grouped bit planes, forwarded to implementations
-        that consume them (scan/ref); kernels re-slice the resident
-        codes in-tile and ignore them.
+      planes: plan-grouped bit planes. Forwarded to implementations
+        that consume them; a grouping mismatch with the executing
+        ``spec.rows_active`` is normalized here (regroup) at trace
+        time, ONLY when the chosen implementation actually reads them
+        — nothing weight-side runs for kernels that ignore planes.
+      slots: plan spread-slot operand (``plan_weights(with_slots=)``).
+        Dropped when grouped at a different rows_active (slots cannot
+        be regrouped); the "slots" backend requires it.
       block: (bm, bn, bk) Pallas tiling override; defaults to the
         tuned winner's blocks, else (128, 128, 128).
     """
@@ -281,6 +322,10 @@ def dispatch(
     cell = shape_cell(m, k, n)
     dtype = w_codes.dtype.name
     noisy = bool(spec.noisy) and key is not None
+    if slots is not None and slots.shape[-2] != spec.rows_active:
+        # Grouped for a different row count — the slot fields encode
+        # that grouping irreversibly, so the operand is unusable here.
+        slots = None
 
     source = "explicit"
     if backend is None:
@@ -295,7 +340,7 @@ def dispatch(
                 if block is None:
                     block = win.block
             else:
-                backend = _heuristic_backend(variant, planes)
+                backend = _heuristic_backend(variant, planes, slots, m)
                 source = "heuristic"
 
     impl = lookup(variant, backend, cell, dtype)
@@ -312,15 +357,26 @@ def dispatch(
         block=block if impl.is_pallas else None,
     ))
 
+    def planes_for(chosen: KernelImpl):
+        if not chosen.supports_planes or planes is None:
+            return None
+        if chosen.is_pallas or planes.shape[-2] == spec.rows_active:
+            # The Pallas flatten-slice path recovers the [K, N] byte
+            # matrix at ANY grouping — no regroup needed there.
+            return planes
+        from repro.core import engine  # noqa: PLC0415 - lazy, no cycle
+
+        return engine.regroup_planes(planes, k, spec.rows_active)
+
     def run(chosen: KernelImpl, blk):
-        return chosen.fn(
-            x_codes,
-            w_codes,
-            spec,
+        kwargs: dict[str, Any] = dict(
             key=key if chosen.supports_noise else None,
-            planes=planes if chosen.supports_planes else None,
+            planes=planes_for(chosen),
             block=blk,
         )
+        if chosen.supports_slots:
+            kwargs["slots"] = slots
+        return chosen.fn(x_codes, w_codes, spec, **kwargs)
 
     if source == "explicit" or backend == "scan":
         return run(impl, block)
@@ -377,11 +433,35 @@ def _pallas_blocks(
     return bm, bn, bk
 
 
+def _slots_impl(attr: str) -> KernelFn:
+    def run(x_codes, w_codes, spec, *, key=None, planes=None, slots=None,
+            block=None):
+        del w_codes, key, planes, block  # weight side IS the slot operand
+        if slots is None:
+            raise ValueError(
+                "slots backend requires a plan's spread-slot operand "
+                "grouped at the executing rows_active "
+                "(engine.plan_weights(with_slots=True)); none provided"
+            )
+        return getattr(ref_lib, attr)(x_codes, slots, spec)
+
+    return run
+
+
 def _pallas_impl(kernel_name: str) -> KernelFn:
     def run(x_codes, w_codes, spec, *, key=None, planes=None, block=None):
-        del key, planes  # noiseless by design; codes stay resident
+        del key  # noiseless by design (production inference path)
         from repro.kernels import ops  # noqa: PLC0415 - optional pallas dep
 
+        if planes is not None and planes.ndim == 3:
+            # Packed plan planes [G, rows, N] uint8: bit b of each byte
+            # is the weight's two's-complement bit b — exactly the
+            # masked codes the kernel's in-tile unpack expects. The
+            # flatten-slice recovers the [K, N] byte matrix at ANY
+            # grouping (K-tail padding is all-zero bytes, dropped
+            # here), so the resident int8 codes never re-load.
+            k = x_codes.shape[1]
+            w_codes = planes.reshape(-1, planes.shape[-1])[:k]
         bm, bn, bk = _pallas_blocks(spec, block)
         fn = getattr(ops, kernel_name)
         return fn(x_codes, w_codes, spec, bm=bm, bn=bn, bk=bk)
@@ -398,8 +478,12 @@ register_kernel(
     supports_planes=True,
 )
 register_kernel(
+    KernelKey("p8t", "slots"), _slots_impl("cim_matmul_slots"),
+    supports_slots=True,
+)
+register_kernel(
     KernelKey("p8t", "pallas"), _pallas_impl("cim_matmul_kernel"),
-    is_pallas=True,
+    supports_planes=True, is_pallas=True,
 )
 
 # cell-adc: the ideal transfer equals the P-8T floor transfer, so scan
@@ -414,8 +498,12 @@ register_kernel(
     supports_planes=True,
 )
 register_kernel(
+    KernelKey("cell-adc", "slots"), _slots_impl("cim_matmul_slots"),
+    supports_slots=True,
+)
+register_kernel(
     KernelKey("cell-adc", "pallas"), _pallas_impl("cell_adc_matmul_kernel"),
-    is_pallas=True,
+    supports_planes=True, is_pallas=True,
 )
 
 register_kernel(
@@ -429,7 +517,12 @@ register_kernel(
     supports_planes=True,
 )
 register_kernel(
+    KernelKey("adder-tree", "slots"),
+    _slots_impl("adder_tree_matmul_slots"),
+    supports_slots=True,
+)
+register_kernel(
     KernelKey("adder-tree", "pallas"),
     _pallas_impl("adder_tree_matmul_kernel"),
-    is_pallas=True,
+    supports_planes=True, is_pallas=True,
 )

@@ -177,6 +177,12 @@ def _render_autotune(
             f"{config.name}: no ok points to build a tuning cache from"
         )
     arch = str(config.params.get("arch", "cpu"))
+    # Seed from the committed per-arch cache (when present): the
+    # output then carries every previously pinned cell, a bumped
+    # sweep_version on the freshly measured ones, and a "stale" list
+    # naming whatever this sweep did NOT re-measure — the --analyze
+    # staleness surface for partial re-sweeps.
+    prev = autotune.TuningCache.load(arch=arch)
     cache = autotune.cache_from_records(
         arch,
         (
@@ -189,9 +195,11 @@ def _render_autotune(
             }
             for r in ok
         ),
+        prev=prev,
     )
     payload = cache.to_json()
     payload["config_hash"] = config.config_hash
+    payload["stale"] = list(autotune.stale_entries(cache))
     path = config.sweep_dir / f"{arch}.tuning.json"
     path.write_text(json.dumps(payload, indent=1, sort_keys=True))
     return [path]

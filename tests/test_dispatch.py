@@ -23,7 +23,7 @@ import pytest
 
 from repro.configs.base import CIMPolicy
 from repro.core import calibrate as cal
-from repro.core import engine, matmul
+from repro.core import engine, matmul, quant
 from repro.core import variants as variants_lib
 from repro.core.params import PAPER_OP_16ROWS, CIMConfig
 from repro.core.pipeline import default_pipeline
@@ -39,6 +39,13 @@ def rand_codes(m, k, n, cfg):
     hi = 1 << (cfg.weight_bits - 1)
     w = jnp.asarray(RNG.integers(lo, hi, (k, n)), jnp.int32)
     return x, w
+
+
+def slot_operand(w, cfg):
+    """The plan's spread-slot operand (the "slots" backend requires it)."""
+    return quant.spread_slots(
+        w, cfg.rows_active, cfg.act_bits, cfg.weight_bits
+    )
 
 
 def scan_oracle(variant, x, w, cfg, *, key=None, planes=None):
@@ -69,9 +76,10 @@ class TestKernelKeyParity:
         cfg = PAPER_OP_16ROWS
         x, w = rand_codes(m, k, n, cfg)
         want = np.asarray(scan_oracle(variant, x, w, cfg))
+        slots = slot_operand(w, cfg)
         for backend in dispatch.backends_for(variant):
             got = dispatch.dispatch(
-                x, w, cfg, variant=variant, backend=backend
+                x, w, cfg, variant=variant, backend=backend, slots=slots
             )
             np.testing.assert_array_equal(
                 np.asarray(got), want, err_msg=f"{variant}/{backend}"
@@ -84,9 +92,10 @@ class TestKernelKeyParity:
                         cutoff=0.5, adc_bits=4)
         x, w = rand_codes(8, 48, 6, cfg)
         want = np.asarray(scan_oracle(variant, x, w, cfg))
+        slots = slot_operand(w, cfg)
         for backend in dispatch.backends_for(variant):
             got = dispatch.dispatch(
-                x, w, cfg, variant=variant, backend=backend
+                x, w, cfg, variant=variant, backend=backend, slots=slots
             )
             np.testing.assert_array_equal(
                 np.asarray(got), want,
@@ -108,9 +117,10 @@ class TestKernelKeyParity:
         # meaningful (guard against a vacuous test)
         floor = np.asarray(scan_oracle(variant, x, w, PAPER_OP_16ROWS))
         assert not np.array_equal(want, floor)
+        slots = slot_operand(w, cfg)
         for backend in dispatch.backends_for(variant):
             got = dispatch.dispatch(
-                x, w, cfg, variant=variant, backend=backend
+                x, w, cfg, variant=variant, backend=backend, slots=slots
             )
             np.testing.assert_array_equal(
                 np.asarray(got), want, err_msg=f"{variant}/{backend}"
@@ -269,11 +279,14 @@ class TestRouting:
             dispatch._TABLE.pop(key, None)
 
     def test_engine_backends_route_through_dispatch(self):
-        """'behavioral'/'pallas' engine backends resolve in the table."""
+        """'behavioral'/'pallas' engine backends resolve in the table.
+
+        The behavioral mode at a decode shape (m=4) rides the plan's
+        spread-slot operand via the heuristic — still dispatch-routed."""
         cfg = PAPER_OP_16ROWS
         w = jnp.asarray(RNG.normal(size=(64, 8)) * 0.1, jnp.float32)
         x = jnp.asarray(RNG.normal(size=(4, 64)).clip(-3, 3), jnp.float32)
-        for mode, backend in [("cim", "scan"), ("cim-kernel", "pallas")]:
+        for mode, backend in [("cim", "slots"), ("cim-kernel", "pallas")]:
             policy = CIMPolicy(mode=mode, cim=cfg, ste=False)
             plan = engine.plan_weights(w, cfg, policy)
             with dispatch.record_resolutions() as log:
@@ -306,7 +319,8 @@ class TestAutotune:
     def fake_measure(self, order):
         def measure(cand, run):
             run()
-            return float(order[cand[0]])
+            # backends the order doesn't rank (e.g. "slots") never win
+            return float(order.get(cand[0], 99.0))
 
         return measure
 

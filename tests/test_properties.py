@@ -255,9 +255,12 @@ def test_every_registered_kernel_key_matches_oracle(
         want = variants_lib.adder_tree_matmul_int(x, w, cfg)
     else:
         want = matmul.cim_matmul_int(x, w, cfg)
+    slots = quant.spread_slots(
+        w, cfg.rows_active, cfg.act_bits, cfg.weight_bits
+    )
     for backend in dispatch.backends_for(variant):
         got = dispatch.dispatch(x, w, cfg, variant=variant,
-                                backend=backend)
+                                backend=backend, slots=slots)
         np.testing.assert_array_equal(
             np.asarray(got), np.asarray(want),
             err_msg=f"{variant}/{backend}",
@@ -293,3 +296,42 @@ def test_tuning_cache_round_trip_determinism(t_scan, t_ref, m, seed):
     best = min(times, key=times.get)
     for win in c1.entries.values():
         assert win.backend == best
+
+
+@given(
+    variant=st.sampled_from(("p8t", "adder-tree", "cell-adc")),
+    rows=st.sampled_from([4, 8, 16]),
+    mode=st.sampled_from(["floor", "nearest"]),
+    m=st.integers(1, 6),
+    k=st.integers(1, 120),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**_SETTINGS)
+def test_fused_slots_equals_unfused_property(
+    variant, rows, mode, m, k, n, seed
+):
+    """PR 9 tentpole invariant: the fused spread-slot formulation (one
+    batched dot + field extraction) is bit-exact vs the unfused scan
+    transfer for every variant, shape, row count and adc mode — the
+    decode fast path never changes semantics."""
+    cfg = CIMConfig(rows_active=rows, cutoff=0.5, adc_bits=4,
+                    adc_mode=mode)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, cfg.act_levels, (m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int32)
+    slots = quant.spread_slots(
+        w, cfg.rows_active, cfg.act_bits, cfg.weight_bits
+    )
+    if variant == "adder-tree":
+        want = variants_lib.adder_tree_matmul_int(x, w, cfg)
+    else:
+        want = matmul.cim_matmul_int(x, w, cfg)
+    got = dispatch.dispatch(
+        x, w.astype(jnp.int8), cfg, variant=variant,
+        backend="slots", slots=slots,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(want),
+        err_msg=f"{variant}/slots rows={rows} mode={mode}",
+    )
