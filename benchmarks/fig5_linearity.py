@@ -27,7 +27,7 @@ def main(quick: bool = False) -> None:
         f"max_std_mV={std_mv.max():.3f};n_mc={n}",
     )
     for pmac, mv, iv, sd in zip(
-        np.asarray(res.codes), mean_v, ideal_v, std_mv
+        np.asarray(res.codes), mean_v, ideal_v, std_mv, strict=True
     ):
         emit(f"fig5b_point_pmac{int(pmac):03d}", 0.0,
              f"mc_V={mv:.5f};ideal_V={iv:.5f};std_mV={sd:.3f}")

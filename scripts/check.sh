@@ -18,10 +18,27 @@ t0=$(date +%s)
 # Invariant linter first — pure stdlib AST analysis, sub-second, and
 # strict (the committed baseline is empty and stays that way): tracer
 # readbacks, nondeterministic artifact writers, registry-contract
-# drift, silent dispatch fallbacks and donation bugs fail the build
-# before any jax compile spends wall time. See docs/analysis.md.
+# drift, silent dispatch fallbacks, donation bugs and CIM6xx range
+# proofs fail the build before any jax compile spends wall time. The
+# run regenerates the range certificate into a tempdir and diffs it
+# against the committed results/analysis/range-certificate.json —
+# certificate drift (a geometry or proof changing without the
+# committed document) fails the same as a finding. See docs/analysis.md.
+cert_tmp="$(mktemp -d)"
+trap 'rm -rf "${cert_tmp}"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m repro.analysis src/repro --strict
+    python -m repro.analysis src/repro --strict \
+    --certificate "${cert_tmp}/range-certificate.json"
+if ! cmp -s "${cert_tmp}/range-certificate.json" \
+        results/analysis/range-certificate.json; then
+    echo "FAIL: range certificate drifted from the committed" \
+        "results/analysis/range-certificate.json — regenerate with" \
+        "'PYTHONPATH=src python -m repro.analysis src/repro --strict'" \
+        "and commit the result" >&2
+    diff "${cert_tmp}/range-certificate.json" \
+        results/analysis/range-certificate.json | head -40 >&2 || true
+    exit 1
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 elapsed=$(( $(date +%s) - t0 ))
 echo "tier-1 wall time: ${elapsed}s (budget ${TIER1_BUDGET_S}s)"
@@ -42,7 +59,7 @@ fi
 # (not raw microseconds) is compared so a slower CI box cancels out
 # of both sides.
 bench_tmp="$(mktemp -d)"
-trap 'rm -rf "${bench_tmp}"' EXIT
+trap 'rm -rf "${bench_tmp}" "${cert_tmp}"' EXIT
 REPRO_BENCH_OUT="${bench_tmp}/BENCH_kernels.json" \
     PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/run.py --only plan,variants,kernels --smoke
@@ -88,7 +105,7 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
 # feasibility validation, a 2-point resumable run into a throwaway
 # dir, and the analysis pass rendering the versioned pareto report.
 sweep_tmp="$(mktemp -d)"
-trap 'rm -rf "${sweep_tmp}" "${bench_tmp}"' EXIT
+trap 'rm -rf "${sweep_tmp}" "${bench_tmp}" "${cert_tmp}"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.sweep configs/sweeps/ci_smoke.json --dry-run \
     --out "${sweep_tmp}"

@@ -21,8 +21,10 @@ from pathlib import Path
 from repro.analysis import rules as rules_pkg
 from repro.analysis.baseline import BaselineError, write_baseline
 from repro.analysis.driver import analyze, find_repo_root, render_json
+from repro.analysis.ranges import render_certificate
 
 DEFAULT_BASELINE = "analysis-baseline.json"
+DEFAULT_CERTIFICATE = "results/analysis/range-certificate.json"
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -32,7 +34,9 @@ def build_parser() -> argparse.ArgumentParser:
             "AST-based invariant linter: tracer safety (CIM101), "
             "artifact determinism (CIM201), registry contracts "
             "(CIM301), silent fallbacks (CIM401), donation safety "
-            "(CIM501)."
+            "(CIM501), f32-exactness overflow (CIM601), silent "
+            "saturation / unproved bounds (CIM602), dtype narrowing "
+            "(CIM603)."
         ),
     )
     p.add_argument(
@@ -68,6 +72,17 @@ def build_parser() -> argparse.ArgumentParser:
             "tests directory for the CIM301 test-reference cross-check "
             "(default: <root>/tests; pass an empty dir to disable)"
         ),
+    )
+    p.add_argument(
+        "--certificate", type=Path, default=None,
+        help=(
+            "where to write the CIM6xx range certificate (default: "
+            f"<root>/{DEFAULT_CERTIFICATE})"
+        ),
+    )
+    p.add_argument(
+        "--no-certificate", action="store_true",
+        help="do not write the range-certificate file",
     )
     p.add_argument(
         "--list-rules", action="store_true",
@@ -120,6 +135,11 @@ def main(argv: list[str] | None = None) -> int:
     except BaselineError as e:
         print(f"repro.analysis: {e}", file=sys.stderr)
         return 2
+
+    if not args.no_certificate and report.certificate is not None:
+        target = args.certificate or (root / DEFAULT_CERTIFICATE)
+        target.parent.mkdir(parents=True, exist_ok=True)
+        target.write_text(render_certificate(report.certificate))
 
     if args.write_baseline:
         target = baseline_path or (root / DEFAULT_BASELINE)

@@ -1,0 +1,176 @@
+"""Machine-checkable range contracts: ``# bound:`` / ``# range:``.
+
+The contract layer turns the repo's prose invariants ("every partial
+sum stays below 2**24", "reference levels never exceed the array
+range") into comments the CIM6xx rules *evaluate* at every registered
+geometry:
+
+``# bound: <comparison>``
+    A proof obligation. The expression is a single ``<``/``<=``
+    comparison over geometry symbols (``pmac_max``, ``stride``,
+    ``adc_step``, ``code_max``, ``G``, ``2**24``, ...; see
+    ``ranges.geometry.mirror_config``) and/or local names of the
+    enclosing function, evaluated by the abstract interpreter. Names
+    resolve geometry-first: a local only binds when no geometry symbol
+    has that name. An optional tag ``# bound(CIM601): ...`` pins the
+    rule family; untagged bounds classify as CIM601 when the expression
+    mentions the f32 mantissa limit (a power of two >= 2**23), CIM602
+    otherwise.
+
+``# range: <name> in [<lo>, <hi>]``
+    An assumption seed for the interpreter: inside the enclosing
+    function, ``<name>`` is asserted to lie in ``[lo, hi]`` (endpoint
+    expressions over geometry symbols and numeric literals). Used to
+    give otherwise-unbounded operands (traced array arguments) a range
+    the narrowing checks can consume.
+
+Both forms attach to the enclosing function (standalone comment lines
+and trailing comments alike); a contract outside any function attaches
+to the module. Malformed contracts are CIM602 findings — a stale or
+unparseable proof obligation must fail loudly, never certify silently.
+"""
+
+from __future__ import annotations
+
+import ast
+import contextlib
+import dataclasses
+import io
+import re
+import tokenize
+
+from repro.analysis.loader import FunctionInfo, Module
+
+# Anchored at the comment's own ``#`` — prose *about* the grammar inside
+# docstrings or nested comments never parses as a contract.
+_BOUND_RE = re.compile(
+    r"^#\s*bound(?:\((?P<tag>CIM6\d\d)\))?:\s*(?P<expr>.+?)\s*$"
+)
+_RANGE_RE = re.compile(
+    r"^#\s*range:\s*(?P<name>[A-Za-z_]\w*)\s+in\s+"
+    r"\[(?P<lo>[^,\]]+),(?P<hi>[^\]]+)\]\s*$"
+)
+
+# Node types allowed inside contract expressions (after parsing).
+_ALLOWED_NODES = (
+    ast.Expression, ast.BinOp, ast.UnaryOp, ast.Compare, ast.Call,
+    ast.Name, ast.Constant, ast.Load,
+    ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv, ast.Mod,
+    ast.Pow, ast.USub, ast.UAdd, ast.Lt, ast.LtE, ast.Gt, ast.GtE,
+)
+_ALLOWED_CALLS = {"min", "max", "abs"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    kind: str  # "bound" | "range"
+    module: str  # dotted module name
+    line: int  # 1-based line the comment sits on
+    symbol: str  # enclosing function qualname, or the module name
+    text: str  # the raw expression text (for messages/certificate)
+    tag: str | None = None  # explicit rule tag on a bound
+    expr: ast.expr | None = None  # the comparison (bound kind)
+    name: str | None = None  # the constrained name (range kind)
+    lo: ast.expr | None = None  # range endpoints
+    hi: ast.expr | None = None
+    error: str | None = None  # parse/validation failure
+
+
+def _validate(node: ast.expr, *, comparison: bool) -> str | None:
+    for sub in ast.walk(node):
+        if not isinstance(sub, _ALLOWED_NODES):
+            return f"unsupported syntax ({type(sub).__name__})"
+        if isinstance(sub, ast.Call) and not (
+            isinstance(sub.func, ast.Name)
+            and sub.func.id in _ALLOWED_CALLS
+            and not sub.keywords
+        ):
+            return "only min/max/abs calls are allowed"
+        if isinstance(sub, ast.Constant) and not isinstance(
+            sub.value, (int, float)
+        ):
+            return "only numeric literals are allowed"
+    body = node.body if isinstance(node, ast.Expression) else node
+    if comparison:
+        if not (
+            isinstance(body, ast.Compare) and len(body.ops) == 1
+        ):
+            return "bound must be a single comparison"
+    elif isinstance(body, ast.Compare):
+        return "range endpoint cannot be a comparison"
+    return None
+
+
+def _parse_expr(text: str, *, comparison: bool) -> tuple[
+    ast.expr | None, str | None
+]:
+    try:
+        node = ast.parse(text.strip(), mode="eval")
+    except SyntaxError as e:
+        return None, f"does not parse ({e.msg})"
+    err = _validate(node, comparison=comparison)
+    if err is not None:
+        return None, err
+    return node.body, None
+
+
+def _enclosing_symbol(mod: Module, line: int) -> str:
+    """Innermost function whose span covers ``line``, else the module."""
+    best: FunctionInfo | None = None
+    best_span = None
+    for info in mod.functions.values():
+        node = info.node
+        start = getattr(node, "lineno", None)
+        end = getattr(node, "end_lineno", None)
+        if start is None or end is None or not (start <= line <= end):
+            continue
+        span = end - start
+        if best_span is None or span < best_span:
+            best, best_span = info, span
+    return best.qualname if best is not None else mod.name
+
+
+def _comments(mod: Module) -> list[tuple[int, str]]:
+    """(line, text) of every real comment token — strings don't count."""
+    src = "\n".join(mod.lines) + "\n"
+    out: list[tuple[int, str]] = []
+    # The loader only hands us parseable files; a malformed token run
+    # just ends the comment scan early.
+    with contextlib.suppress(
+        tokenize.TokenError, IndentationError, SyntaxError
+    ):
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if tok.type == tokenize.COMMENT:
+                out.append((tok.start[0], tok.string))
+    return out
+
+
+def collect_contracts(mod: Module) -> list[Contract]:
+    """All contracts in one module, in line order."""
+    out: list[Contract] = []
+    for i, raw in _comments(mod):
+        m = _BOUND_RE.search(raw)
+        if m is not None:
+            expr, err = _parse_expr(m.group("expr"), comparison=True)
+            out.append(Contract(
+                kind="bound", module=mod.name, line=i,
+                symbol=_enclosing_symbol(mod, i),
+                text=m.group("expr").strip(), tag=m.group("tag"),
+                expr=expr, error=err,
+            ))
+            continue
+        m = _RANGE_RE.search(raw)
+        if m is not None:
+            lo, lo_err = _parse_expr(m.group("lo"), comparison=False)
+            hi, hi_err = _parse_expr(m.group("hi"), comparison=False)
+            out.append(Contract(
+                kind="range", module=mod.name, line=i,
+                symbol=_enclosing_symbol(mod, i),
+                text=(
+                    f"{m.group('name')} in "
+                    f"[{m.group('lo').strip()}, {m.group('hi').strip()}]"
+                ),
+                name=m.group("name"), lo=lo, hi=hi,
+                error=lo_err or hi_err,
+            ))
+    return out

@@ -25,6 +25,7 @@ from repro.analysis.findings import (
     with_snippet,
 )
 from repro.analysis.loader import Project
+from repro.analysis.ranges import certificate_payload
 
 
 @dataclasses.dataclass
@@ -34,6 +35,10 @@ class Report:
     baselined: int
     stale_baseline: int  # baseline entries matching nothing anymore
     checked_files: int
+    # Range-certificate document (CIM6xx proofs). Deliberately NOT part
+    # of to_json(): the findings schema is locked at SCHEMA_VERSION and
+    # the certificate is its own artifact with its own schema field.
+    certificate: dict | None = None
 
     @property
     def exit_code(self) -> int:
@@ -108,6 +113,8 @@ def analyze(
     for rule in rules_pkg.ALL_RULES:
         if hasattr(rule, "tests_dir"):
             rule.tests_dir = tests_dir
+        if hasattr(rule, "root"):
+            rule.root = root
         for f in rule.check(project):
             mod = project.modules.get(f.symbol)
             if mod is None:
@@ -156,6 +163,7 @@ def analyze(
             baselined=0,
             stale_baseline=stale,
             checked_files=len(project.modules),
+            certificate=certificate_payload(project, root),
         )
         return report, kept
 
@@ -167,6 +175,7 @@ def analyze(
         baselined=len(matched),
         stale_baseline=len(baseline - matched),
         checked_files=len(project.modules),
+        certificate=certificate_payload(project, root),
     )
     return report, kept
 

@@ -59,6 +59,13 @@ class FunctionInfo:
     # Parameter names declared static at a jit site (compile-time
     # constants — expressions over them are not tracer readbacks).
     static_params: set[str] = dataclasses.field(default_factory=set)
+    # Resolved call sites *in this function's body*: (callee dotted
+    # qualname, the Call node). The interprocedural legs (CIM101's
+    # cross-call static flow, CIM501's one-hop donation tracking) need
+    # the argument expressions, not just the `calls` edge set.
+    call_sites: list[tuple[str, ast.Call]] = dataclasses.field(
+        default_factory=list
+    )
 
 
 @dataclasses.dataclass
@@ -311,6 +318,7 @@ class _Indexer(ast.NodeVisitor):
             callee = self._lookup_func(node.func.id)
         if info is not None and callee is not None:
             info.calls.add(callee)
+            info.call_sites.append((callee, node))
         if isinstance(node.func, ast.Name) and callee is None:
             pass
         # Record bare-name local calls as edges too (nested helpers).
@@ -318,6 +326,8 @@ class _Indexer(ast.NodeVisitor):
             local = self._lookup_func(node.func.id)
             if local is not None:
                 info.calls.add(local)
+                if local != callee:
+                    info.call_sites.append((local, node))
         if callee in _TRACE_WRAPPERS:
             statics = _static_argnames(node)
             for idx in _TRACE_WRAPPERS[callee]:

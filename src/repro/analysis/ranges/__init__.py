@@ -1,0 +1,29 @@
+"""Value-range certification for the integer MAC pipeline.
+
+The subpackage behind the CIM601/602/603 rule family:
+
+* :mod:`interval` — the abstract domain (closed numeric intervals with
+  ``±inf`` endpoints, TOP = unknown);
+* :mod:`geometry` — pure-Python mirrors of the operating-point math
+  (``CIMConfig`` derived quantities, ``slot_spec``, ``merged_quant``)
+  plus the binder that enumerates every concrete geometry reachable
+  from the variant registry × the committed ``configs/sweeps/*.json``
+  grids (cross-validated against the jax implementations in tier-1
+  tests — the analyzer itself never imports jax);
+* :mod:`engine` — the abstract interpreter that evaluates
+  ``# bound:``/``# range:`` contracts (see
+  :mod:`repro.analysis.contracts`) and dtype-narrowing sites at each
+  geometry, producing findings and the deterministic
+  ``results/analysis/range-certificate.json``.
+"""
+
+from repro.analysis.ranges.engine import (  # noqa: F401 - re-exports
+    analyze_ranges,
+    certificate_payload,
+    render_certificate,
+)
+from repro.analysis.ranges.geometry import (  # noqa: F401 - re-exports
+    GeometryPoint,
+    enumerate_geometries,
+)
+from repro.analysis.ranges.interval import TOP, Interval  # noqa: F401

@@ -1,0 +1,1038 @@
+"""Abstract interpreter + bound prover behind CIM601/602/603.
+
+For every :class:`~repro.analysis.ranges.geometry.GeometryPoint` the
+binder enumerates, the engine
+
+1. interprets each contract-relevant function over the interval domain
+   (:mod:`ranges.interval`), seeding parameters from the geometry's
+   symbol table (a parameter literally named ``weight_bits`` *is* the
+   geometry's ``weight_bits`` at a certified call site; ``*Config``/
+   ``*Spec``-annotated parameters become abstract records whose
+   attribute reads resolve to geometry values) and from ``# range:``
+   assumptions;
+2. evaluates every ``# bound:`` contract — geometry symbols first, the
+   enclosing function's derived locals second. A bound referencing the
+   contraction depth (``K``/``G``) is evaluated at every K in the
+   geometry's ``k_values``;
+3. checks every literal dtype-narrowing site (``x.astype(jnp.int8)``,
+   ``bitslice_weights(..., dtype=jnp.int8)``) whose operand interval
+   the interpreter could derive;
+4. requires every ``preferred_element_type=jnp.float32`` contraction in
+   a contract-carrying module to sit in a function with a ``# bound:``
+   (an f32 accumulation without a proved bound is exactly the overflow
+   class CIM601 exists for).
+
+Statuses per (site, geometry): *proved* (max < limit, recorded in the
+certificate), *violated* (a derivable max reaches the limit — finding),
+*unproved* (a bound whose operands stay unbounded — finding: the
+contract is stale or wrong), *skipped* (a symbol structurally absent at
+this geometry, e.g. slot symbols where packing is infeasible — the real
+code raises there), *underived* (narrowing site whose operand interval
+is unknown; listed in the certificate, silent otherwise).
+
+Everything is deterministic: geometries, sites and proofs are sorted,
+and :func:`render_certificate` byte-reproduces on identical inputs.
+"""
+
+from __future__ import annotations
+
+import ast
+import contextlib
+import dataclasses
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis import contracts as contracts_mod
+from repro.analysis.findings import Finding, rel_path
+from repro.analysis.loader import FunctionInfo, Module, Project
+from repro.analysis.ranges import interval as iv
+from repro.analysis.ranges.geometry import (
+    GeometryPoint,
+    enumerate_geometries,
+)
+from repro.analysis.ranges.interval import TOP, Interval
+
+CERT_SCHEMA_VERSION = 1
+
+_F32_LIMIT_BITS = 23  # constants >= 2**23 mark a mantissa-exactness bound
+_MAX_UNROLL = 64
+
+_DTYPE_RANGES = {
+    "int8": (-(1 << 7), (1 << 7) - 1),
+    "uint8": (0, (1 << 8) - 1),
+    "int16": (-(1 << 15), (1 << 15) - 1),
+    "uint16": (0, (1 << 16) - 1),
+    "int32": (-(1 << 31), (1 << 31) - 1),
+    "uint32": (0, (1 << 32) - 1),
+}
+
+# Attribute map of the abstract config record (CIMConfig / MacroSpec):
+# reads resolve straight into the geometry symbol table.
+_MERGED_ATTRS = {
+    "step": "merged_step",
+    "levels": "merged_levels",
+}
+_SPEC_PRODUCER_LEAVES = {
+    "as_spec", "from_config", "to_spec", "replace", "adapt_spec",
+    "anchor_spec", "evolve",
+}
+_IDENTITY_FNS = {
+    "reshape", "transpose", "ravel", "flatten", "squeeze", "moveaxis",
+    "swapaxes", "broadcast_to", "expand_dims", "stop_gradient", "copy",
+    "asarray", "array", "sort", "flip", "roll", "take_along_axis",
+}
+
+
+class _Record:
+    """Abstract record whose attribute reads index a symbol table."""
+
+    def __init__(self, attrs: dict[str, float], alias: dict[str, str]):
+        self.attrs = attrs
+        self.alias = alias
+
+    def get(self, name: str):
+        key = self.alias.get(name, name)
+        if key in self.attrs:
+            return iv.const(self.attrs[key])
+        return TOP
+
+
+@dataclasses.dataclass
+class _NarrowSite:
+    module: str
+    symbol: str
+    line: int
+    col: int
+    dtype: str
+    form: str  # "astype" | "bitslice dtype="
+
+
+@dataclasses.dataclass
+class SiteResult:
+    """One certified site, aggregated over all geometries."""
+
+    module: str
+    symbol: str
+    line: int
+    col: int
+    rule: str
+    kind: str  # bound | narrow | coverage | contract
+    expr: str
+    status: str  # proved | violated | unproved | skipped | underived
+    proofs: list[dict] = dataclasses.field(default_factory=list)
+    failures: list[dict] = dataclasses.field(default_factory=list)
+    message: str | None = None
+
+    @property
+    def sort_key(self) -> tuple:
+        return (self.module, self.line, self.col, self.rule, self.expr)
+
+
+@dataclasses.dataclass
+class RangeResult:
+    geometries: list[GeometryPoint]
+    excluded: list[dict]
+    sites: list[SiteResult]
+
+    def findings(self, rule_id: str) -> Iterator[Finding]:
+        for site in self.sites:
+            if site.rule != rule_id or site.message is None:
+                continue
+            yield Finding(
+                rule=rule_id, path="", line=site.line, col=site.col,
+                message=site.message, symbol=site.symbol,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Abstract interpretation of one function at one geometry
+# ---------------------------------------------------------------------------
+
+
+class _Interp:
+    def __init__(
+        self,
+        mod: Module,
+        info: FunctionInfo,
+        syms: dict[str, float],
+        seeds: dict[str, Interval],
+    ) -> None:
+        self.mod = mod
+        self.syms = syms
+        self.env: dict[str, object] = {}
+        self.narrow_obs: dict[tuple[int, int], Interval] = {}
+        args = getattr(info.node, "args", None)
+        if args is not None:
+            from repro.analysis.rules.cim101_tracer import (
+                _config_annotation,
+            )
+
+            for a in args.posonlyargs + args.args + args.kwonlyargs:
+                if a.arg in syms:
+                    self.env[a.arg] = iv.const(syms[a.arg])
+                elif a.annotation is not None and _config_annotation(
+                    a.annotation
+                ):
+                    self.env[a.arg] = _Record(syms, _MERGED_ATTRS)
+                else:
+                    self.env[a.arg] = TOP
+        self.env.update(seeds)
+
+    # -- statements ------------------------------------------------------
+
+    def run(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested defs are their own interpretation targets
+        if isinstance(stmt, ast.Assign):
+            val = self._eval(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, val)
+        elif isinstance(stmt, ast.AnnAssign):
+            val = self._eval(stmt.value) if stmt.value is not None else TOP
+            self._bind(stmt.target, val)
+        elif isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, ast.Name):
+                cur = self._load(stmt.target.id)
+                rhs = self._eval(stmt.value)
+                self.env[stmt.target.id] = self._binop(stmt.op, cur, rhs)
+        elif isinstance(stmt, ast.Expr):
+            self._eval(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self._eval(stmt.test)
+            before = dict(self.env)
+            self.run(stmt.body)
+            after_body = self.env
+            self.env = dict(before)
+            self.run(stmt.orelse)
+            self.env = self._join_envs(after_body, self.env)
+        elif isinstance(stmt, ast.For):
+            self._for(stmt)
+        elif isinstance(stmt, ast.While):
+            self._eval(stmt.test)
+            self._havoc(stmt.body)
+            self.run(stmt.body)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._havoc(stmt.body)
+            self.run(stmt.body)
+        elif isinstance(stmt, ast.Return) and stmt.value is not None:
+            self._eval(stmt.value)
+        # Raise/Pass/Assert/Import/...: no env effect we track.
+
+    def _for(self, stmt: ast.For) -> None:
+        bounds = self._range_bounds(stmt.iter)
+        if (
+            bounds is not None
+            and isinstance(stmt.target, ast.Name)
+            and bounds[1] - bounds[0] <= _MAX_UNROLL
+        ):
+            lo, hi = bounds
+            if lo >= hi:
+                self._havoc(stmt.body)  # body may still bind names
+                return
+            for i in range(lo, hi):
+                self.env[stmt.target.id] = iv.const(i)
+                self.run(stmt.body)
+            self.run(stmt.orelse)
+            return
+        src = self._eval(stmt.iter)
+        self._havoc(stmt.body)
+        self._bind(stmt.target, src if isinstance(src, Interval) else TOP)
+        self.run(stmt.body)
+        self.run(stmt.orelse)
+
+    def _range_bounds(self, node: ast.AST) -> tuple[int, int] | None:
+        if not (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "range"
+            and not node.keywords
+            and 1 <= len(node.args) <= 2
+        ):
+            return None
+        vals = []
+        for a in node.args:
+            v = self._eval(a)
+            c = v.concrete if isinstance(v, Interval) else None
+            if c is None or c != int(c):
+                return None
+            vals.append(int(c))
+        return (0, vals[0]) if len(vals) == 1 else (vals[0], vals[1])
+
+    def _havoc(self, body: list[ast.stmt]) -> None:
+        """TOP every name the statements may (re)bind — loop soundness."""
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)
+                ):
+                    self.env[node.id] = TOP
+
+    def _bind(self, target: ast.AST, val: object) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = val
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, TOP)
+        # Attribute/Subscript stores: no tracked effect.
+
+    def _join_envs(self, a: dict, b: dict) -> dict:
+        out: dict[str, object] = {}
+        for name in set(a) | set(b):
+            va, vb = a.get(name, TOP), b.get(name, TOP)
+            if isinstance(va, _Record) and va is vb:
+                out[name] = va
+            elif isinstance(va, Interval) and isinstance(vb, Interval):
+                out[name] = iv.join(va, vb)
+            else:
+                out[name] = TOP
+        return out
+
+    # -- expressions -----------------------------------------------------
+
+    def _load(self, name: str) -> object:
+        if name in self.env:
+            return self.env[name]
+        if name in self.syms:
+            return iv.const(self.syms[name])
+        return TOP
+
+    def _eval(self, node: ast.AST) -> object:
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, bool):
+                return iv.const(int(node.value))
+            if isinstance(node.value, (int, float)):
+                return iv.const(node.value)
+            return TOP
+        if isinstance(node, ast.Name):
+            return self._load(node.id)
+        if isinstance(node, ast.Attribute):
+            base = self._eval(node.value)
+            if isinstance(base, _Record):
+                return base.get(node.attr)
+            return TOP
+        if isinstance(node, ast.BinOp):
+            return self._binop(
+                node.op, self._eval(node.left), self._eval(node.right)
+            )
+        if isinstance(node, ast.UnaryOp):
+            v = self._eval(node.operand)
+            if isinstance(v, Interval) and isinstance(node.op, ast.USub):
+                return iv.neg(v)
+            if isinstance(v, Interval) and isinstance(node.op, ast.UAdd):
+                return v
+            return Interval(0, 1) if isinstance(node.op, ast.Not) else TOP
+        if isinstance(node, (ast.Compare, ast.BoolOp)):
+            for child in ast.iter_child_nodes(node):
+                self._eval(child)
+            return Interval(0, 1)
+        if isinstance(node, ast.IfExp):
+            self._eval(node.test)
+            a, b = self._eval(node.body), self._eval(node.orelse)
+            if isinstance(a, Interval) and isinstance(b, Interval):
+                return iv.join(a, b)
+            return TOP
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, ast.Subscript):
+            base = self._eval(node.value)
+            # Elementwise view: indexing an abstract array keeps its range.
+            return base if isinstance(base, Interval) else TOP
+        if isinstance(node, (ast.Tuple, ast.List)):
+            vals = [self._eval(e) for e in node.elts]
+            ivs = [v for v in vals if isinstance(v, Interval)]
+            if ivs and len(ivs) == len(vals):
+                out = ivs[0]
+                for v in ivs[1:]:
+                    out = iv.join(out, v)
+                return out
+            return TOP
+        if isinstance(node, ast.Starred):
+            return self._eval(node.value)
+        for child in ast.iter_child_nodes(node):
+            self._eval(child)
+        return TOP
+
+    def _binop(self, op: ast.AST, a: object, b: object) -> object:
+        if not (isinstance(a, Interval) and isinstance(b, Interval)):
+            return TOP
+        if isinstance(op, ast.Add):
+            return iv.add(a, b)
+        if isinstance(op, ast.Sub):
+            return iv.sub(a, b)
+        if isinstance(op, ast.Mult):
+            return iv.mul(a, b)
+        if isinstance(op, ast.Div):
+            return iv.div(a, b)
+        if isinstance(op, ast.FloorDiv):
+            return iv.div(a, b, floor=True)
+        if isinstance(op, ast.Mod):
+            return iv.mod(a, b)
+        if isinstance(op, ast.Pow):
+            return iv.pow_(a, b)
+        if isinstance(op, ast.LShift):
+            e = b.concrete
+            if e is not None and e == int(e) and e >= 0 and a.bounded:
+                return iv.mul(a, iv.const(1 << int(e)))
+            return TOP
+        if isinstance(op, ast.RShift):
+            if a.lo >= 0:
+                return Interval(0, a.hi)
+            return TOP
+        if isinstance(op, ast.BitAnd):
+            return self._bitand(a, b)
+        return TOP
+
+    @staticmethod
+    def _bitand(a: Interval, b: Interval) -> Interval:
+        for x, mask in ((a, b), (b, a)):
+            m = mask.concrete
+            if m is not None and m == int(m) and m >= 0 and x.lo >= 0:
+                return Interval(0, min(x.hi, int(m)))
+        m = min(
+            m for m in (a.concrete, b.concrete) if m is not None
+        ) if (a.concrete is not None or b.concrete is not None) else None
+        if m is not None and m >= 0:
+            return Interval(0, int(m))
+        return TOP
+
+    def _dtype_of(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value if node.value in _DTYPE_RANGES else None
+        resolved = self.mod.resolve(node)
+        if resolved is not None:
+            leaf = resolved.rpartition(".")[2]
+            if leaf in _DTYPE_RANGES:
+                return leaf
+        return None
+
+    def _call(self, node: ast.Call) -> object:
+        func = node.func
+        leaf = None
+        if isinstance(func, ast.Name):
+            leaf = func.id
+        elif isinstance(func, ast.Attribute):
+            leaf = func.attr
+        args = [self._eval(a) for a in node.args]
+        kwargs = {
+            kw.arg: self._eval(kw.value)
+            for kw in node.keywords
+            if kw.arg is not None
+        }
+
+        def arg_iv(i: int) -> Interval:
+            v = args[i] if i < len(args) else TOP
+            return v if isinstance(v, Interval) else TOP
+
+        if leaf == "astype":
+            base = (
+                self._eval(func.value)
+                if isinstance(func, ast.Attribute)
+                else TOP
+            )
+            if node.args:
+                dtype = self._dtype_of(node.args[0])
+                if dtype is not None and isinstance(base, Interval):
+                    self.narrow_obs[(node.lineno, node.col_offset)] = base
+            return base
+        if leaf == "bitslice_weights":
+            out = Interval(0, 1)
+            for kw in node.keywords:
+                if kw.arg == "dtype" and self._dtype_of(kw.value):
+                    self.narrow_obs[(node.lineno, node.col_offset)] = out
+            return out
+        if leaf == "plane_signs":
+            b = arg_iv(0).concrete
+            if b is None:
+                b = self.syms.get("weight_bits")
+            if b is not None and b == int(b) and b >= 1:
+                b = int(b)
+                return Interval(
+                    -(1 << (b - 1)), (1 << (b - 2)) if b > 1 else 1
+                )
+            return TOP
+        if leaf == "slot_spec":
+            if "stride" in self.syms:
+                return _Record(self.syms, _MERGED_ATTRS)
+            return TOP  # infeasible packing: the real call returns None
+        if leaf == "merged_quant":
+            return _Record(self.syms, _MERGED_ATTRS)
+        if leaf in _SPEC_PRODUCER_LEAVES:
+            return _Record(self.syms, _MERGED_ATTRS)
+        if leaf == "clip":
+            return iv.clamp(arg_iv(0), arg_iv(1), arg_iv(2))
+        if leaf == "floor":
+            return iv.floor_(arg_iv(0))
+        if leaf in ("round", "rint"):
+            return iv.round_(arg_iv(0))
+        if leaf in ("abs", "absolute", "fabs"):
+            return iv.abs_(arg_iv(0))
+        if leaf in ("minimum", "min"):
+            if len(args) >= 2:
+                return iv.min_(arg_iv(0), arg_iv(1))
+            return arg_iv(0)
+        if leaf in ("maximum", "max"):
+            if len(args) >= 2:
+                return iv.max_(arg_iv(0), arg_iv(1))
+            return arg_iv(0)
+        if leaf == "where" and len(args) >= 3:
+            a, b = arg_iv(1), arg_iv(2)
+            return iv.join(a, b)
+        if leaf == "pad":
+            return iv.join(arg_iv(0), iv.const(0))
+        if leaf in ("zeros", "zeros_like", "empty", "empty_like"):
+            return iv.const(0)
+        if leaf in ("ones", "ones_like",):
+            return iv.const(1)
+        if leaf == "arange":
+            lohi = [a.concrete for a in (arg_iv(0), arg_iv(1))]
+            if len(node.args) == 1 and lohi[0] is not None and lohi[0] >= 1:
+                return Interval(0, lohi[0] - 1)
+            if (
+                len(node.args) >= 2
+                and lohi[0] is not None
+                and lohi[1] is not None
+                and lohi[1] > lohi[0]
+            ):
+                return Interval(lohi[0], lohi[1] - 1)
+            return TOP
+        if leaf == "bitwise_and" and len(args) >= 2:
+            return self._bitand(arg_iv(0), arg_iv(1))
+        if leaf == "right_shift" and len(args) >= 2:
+            a = arg_iv(0)
+            return Interval(0, a.hi) if a.lo >= 0 else TOP
+        if leaf in ("stack", "concatenate", "hstack", "vstack"):
+            return arg_iv(0)
+        if leaf in _IDENTITY_FNS:
+            if isinstance(func, ast.Attribute) and not node.args:
+                base = self._eval(func.value)
+                return base if isinstance(base, Interval) else TOP
+            return args[0] if args and isinstance(args[0], Interval) else TOP
+        if leaf == "range":
+            b = self._range_bounds(node)
+            if b is not None and b[1] > b[0]:
+                return Interval(b[0], b[1] - 1)
+            return TOP
+        _ = kwargs
+        return TOP
+
+
+# ---------------------------------------------------------------------------
+# Site discovery (narrowing + f32-dot coverage)
+# ---------------------------------------------------------------------------
+
+
+def _narrow_sites(mod: Module, info: FunctionInfo) -> list[_NarrowSite]:
+    out: list[_NarrowSite] = []
+    interp = None  # dtype resolution only needs the module alias map
+
+    def dtype_of(node: ast.AST) -> str | None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return node.value if node.value in _DTYPE_RANGES else None
+        resolved = mod.resolve(node)
+        if resolved is not None:
+            leaf = resolved.rpartition(".")[2]
+            if leaf in _DTYPE_RANGES:
+                return leaf
+        return None
+
+    _ = interp
+    for node in _walk_own(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if (
+            isinstance(func, ast.Attribute)
+            and func.attr == "astype"
+            and node.args
+        ):
+            dtype = dtype_of(node.args[0])
+            if dtype is not None:
+                out.append(_NarrowSite(
+                    module=mod.name, symbol=info.qualname,
+                    line=node.lineno, col=node.col_offset,
+                    dtype=dtype, form="astype ",
+                ))
+        leaf = (
+            func.id if isinstance(func, ast.Name)
+            else func.attr if isinstance(func, ast.Attribute) else None
+        )
+        if leaf == "bitslice_weights":
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    dtype = dtype_of(kw.value)
+                    if dtype is not None:
+                        out.append(_NarrowSite(
+                            module=mod.name, symbol=info.qualname,
+                            line=node.lineno, col=node.col_offset,
+                            dtype=dtype, form="bitslice dtype=",
+                        ))
+    return out
+
+
+def _f32_dot_sites(mod: Module, info: FunctionInfo) -> list[tuple[int, int]]:
+    out: list[tuple[int, int]] = []
+    for node in _walk_own(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "preferred_element_type":
+                continue
+            resolved = mod.resolve(kw.value)
+            if resolved is not None and resolved.rpartition(".")[2] == (
+                "float32"
+            ):
+                out.append((node.lineno, node.col_offset))
+    return out
+
+
+def _walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(
+            child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            continue
+        yield from _walk_own(child)
+
+
+# ---------------------------------------------------------------------------
+# Contract evaluation
+# ---------------------------------------------------------------------------
+
+
+class _BoundEvalError(Exception):
+    pass
+
+
+def _eval_contract_expr(
+    node: ast.expr,
+    syms: dict[str, float],
+    env: dict[str, object] | None,
+) -> Interval:
+    """Interval value of a contract expression, geometry symbols first."""
+    if isinstance(node, ast.Constant):
+        return iv.const(node.value)
+    if isinstance(node, ast.Name):
+        if node.id in syms:
+            return iv.const(syms[node.id])
+        if env is not None:
+            v = env.get(node.id)
+            if isinstance(v, Interval):
+                if v.is_top:
+                    raise _BoundEvalError(
+                        f"'{node.id}' has no derivable range"
+                    )
+                return v
+        raise _BoundEvalError(f"unknown name '{node.id}'")
+    if isinstance(node, ast.UnaryOp):
+        v = _eval_contract_expr(node.operand, syms, env)
+        if isinstance(node.op, ast.USub):
+            return iv.neg(v)
+        return v
+    if isinstance(node, ast.BinOp):
+        a = _eval_contract_expr(node.left, syms, env)
+        b = _eval_contract_expr(node.right, syms, env)
+        ops = {
+            ast.Add: iv.add, ast.Sub: iv.sub, ast.Mult: iv.mul,
+            ast.Pow: iv.pow_,
+        }
+        for op_t, fn in ops.items():
+            if isinstance(node.op, op_t):
+                return fn(a, b)
+        if isinstance(node.op, ast.Div):
+            return iv.div(a, b)
+        if isinstance(node.op, ast.FloorDiv):
+            return iv.div(a, b, floor=True)
+        if isinstance(node.op, ast.Mod):
+            return iv.mod(a, b)
+        raise _BoundEvalError("unsupported operator")
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        vals = [_eval_contract_expr(a, syms, env) for a in node.args]
+        if node.func.id == "abs" and len(vals) == 1:
+            return iv.abs_(vals[0])
+        if node.func.id == "min" and vals:
+            out = vals[0]
+            for v in vals[1:]:
+                out = iv.min_(out, v)
+            return out
+        if node.func.id == "max" and vals:
+            out = vals[0]
+            for v in vals[1:]:
+                out = iv.max_(out, v)
+            return out
+    raise _BoundEvalError("unsupported expression")
+
+
+def _mentions_f32_limit(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if (
+            isinstance(sub, ast.BinOp)
+            and isinstance(sub.op, ast.Pow)
+            and isinstance(sub.left, ast.Constant)
+            and sub.left.value == 2
+            and isinstance(sub.right, ast.Constant)
+            and isinstance(sub.right.value, int)
+            and sub.right.value >= _F32_LIMIT_BITS
+        ):
+            return True
+        if (
+            isinstance(sub, ast.Constant)
+            and isinstance(sub.value, int)
+            and sub.value >= (1 << _F32_LIMIT_BITS)
+            and sub.value & (sub.value - 1) == 0
+        ):
+            return True
+    return False
+
+
+def _uses_depth(node: ast.expr) -> bool:
+    return any(
+        isinstance(sub, ast.Name) and sub.id in ("K", "G")
+        for sub in ast.walk(node)
+    )
+
+
+def _bound_rule(contract: contracts_mod.Contract) -> str:
+    if contract.tag is not None:
+        return contract.tag
+    if contract.expr is not None and _mentions_f32_limit(contract.expr):
+        return "CIM601"
+    return "CIM602"
+
+
+# ---------------------------------------------------------------------------
+# The per-project analysis (cached)
+# ---------------------------------------------------------------------------
+
+
+def analyze_ranges(project: Project, root: Path | None) -> RangeResult:
+    cache = project.__dict__.setdefault("_range_cache", {})
+    key = str(root) if root is not None else ""
+    if key not in cache:
+        cache[key] = _analyze(project, root)
+    return cache[key]
+
+
+def _analyze(project: Project, root: Path | None) -> RangeResult:
+    geometries, excluded = enumerate_geometries(project, root)
+    gids = {g.key: f"g{i:03d}" for i, g in enumerate(geometries)}
+
+    # Collect contracts per module; only modules that opt in (carry at
+    # least one contract) get the narrowing/coverage scans — the layer
+    # is opt-in per module, not a repo-wide dragnet.
+    per_mod: dict[str, list[contracts_mod.Contract]] = {}
+    for name in sorted(project.modules):
+        found = contracts_mod.collect_contracts(project.modules[name])
+        if found:
+            per_mod[name] = found
+
+    sites: list[SiteResult] = []
+    for mod_name, contract_list in per_mod.items():
+        mod = project.modules[mod_name]
+        bounds = [c for c in contract_list if c.kind == "bound"]
+        ranges = [c for c in contract_list if c.kind == "range"]
+
+        # Malformed contracts fail loudly (CIM602).
+        for c in contract_list:
+            if c.error is not None:
+                sites.append(SiteResult(
+                    module=mod_name, symbol=c.symbol, line=c.line, col=0,
+                    rule="CIM602", kind="contract", expr=c.text,
+                    status="unproved",
+                    message=(
+                        f"malformed # {c.kind}: contract "
+                        f"'{c.text}' — {c.error}"
+                    ),
+                ))
+
+        bound_fns = {c.symbol for c in bounds if c.error is None}
+        interp_fns: dict[str, FunctionInfo] = {}
+        narrow_by_fn: dict[str, list[_NarrowSite]] = {}
+        for qual, info in mod.functions.items():
+            ns = _narrow_sites(mod, info)
+            if ns:
+                narrow_by_fn[qual] = ns
+            if ns or qual in bound_fns:
+                interp_fns[qual] = info
+
+        # f32-accumulating contractions need a covering bound contract.
+        for qual, info in sorted(mod.functions.items()):
+            for line, col in _f32_dot_sites(mod, info):
+                if qual in bound_fns:
+                    continue
+                sites.append(SiteResult(
+                    module=mod_name, symbol=qual, line=line, col=col,
+                    rule="CIM602", kind="coverage",
+                    expr="preferred_element_type=float32",
+                    status="unproved",
+                    message=(
+                        "f32-accumulating contraction without a "
+                        "covering '# bound:' contract in the enclosing "
+                        "function — the accumulated integer range is "
+                        "unproved against the 2**24 mantissa limit"
+                    ),
+                ))
+
+        # Interpret + evaluate per geometry.
+        bound_states: dict[int, SiteResult] = {}
+        narrow_states: dict[tuple[str, int, int], SiteResult] = {}
+        for c in bounds:
+            if c.error is None:
+                bound_states[c.line] = SiteResult(
+                    module=mod_name, symbol=c.symbol, line=c.line, col=0,
+                    rule=_bound_rule(c), kind="bound", expr=c.text,
+                    status="proved",
+                )
+        for qual, ns_list in narrow_by_fn.items():
+            for ns in ns_list:
+                narrow_states[(qual, ns.line, ns.col)] = SiteResult(
+                    module=mod_name, symbol=ns.symbol, line=ns.line,
+                    col=ns.col, rule="CIM603", kind="narrow",
+                    expr=f"{ns.form}{ns.dtype}", status="underived",
+                )
+
+        for geo in geometries:
+            gid = gids[geo.key]
+            base_syms = geo.symbols()
+            envs: dict[str, dict[str, object]] = {}
+            obs: dict[str, dict[tuple[int, int], Interval]] = {}
+            for qual, info in interp_fns.items():
+                seeds: dict[str, Interval] = {}
+                seed_err: str | None = None
+                for rc in ranges:
+                    if rc.symbol != qual or rc.error is not None:
+                        continue
+                    try:
+                        lo = _eval_contract_expr(rc.lo, base_syms, None)
+                        hi = _eval_contract_expr(rc.hi, base_syms, None)
+                        seeds[rc.name] = Interval(lo.lo, hi.hi)
+                    except (_BoundEvalError, ValueError) as e:
+                        seed_err = f"{rc.text}: {e}"
+                # Surface once, geometry-independent.
+                if seed_err is not None and not any(
+                    s.kind == "contract" and s.symbol == qual
+                    and seed_err in (s.message or "")
+                    for s in sites
+                ):
+                    sites.append(SiteResult(
+                        module=mod_name, symbol=qual, line=0, col=0,
+                        rule="CIM602", kind="contract", expr=seed_err,
+                        status="unproved",
+                        message=(
+                            f"# range: contract not evaluable — "
+                            f"{seed_err}"
+                        ),
+                    ))
+                terp = _Interp(mod, info, base_syms, seeds)
+                body = info.node.body
+                # Defensive: pathological nesting just loses precision.
+                with contextlib.suppress(RecursionError):
+                    terp.run(body if isinstance(body, list) else [])
+                envs[qual] = terp.env
+                obs[qual] = terp.narrow_obs
+
+            for c in bounds:
+                if c.error is not None:
+                    continue
+                state = bound_states[c.line]
+                env = envs.get(c.symbol)
+                ks = (
+                    geo.k_values if _uses_depth(c.expr) else (None,)
+                )
+                worst: dict | None = None
+                for k in ks:
+                    syms = geo.symbols(k)
+                    try:
+                        cmp_node = c.expr
+                        lhs = _eval_contract_expr(
+                            cmp_node.left, syms, env
+                        )
+                        rhs = _eval_contract_expr(
+                            cmp_node.comparators[0], syms, env
+                        )
+                    except _BoundEvalError as e:
+                        if "stride" in str(e) or "per_slot" in str(e) or (
+                            "n_slots" in str(e)
+                        ):
+                            _mark_skip(state, gid, str(e))
+                            worst = None
+                            break
+                        state.status = "unproved"
+                        state.message = (
+                            f"bound '{c.text}' cannot be evaluated: {e}"
+                        )
+                        worst = None
+                        break
+                    op = cmp_node.ops[0]
+                    lo_side, hi_side = (lhs, rhs)
+                    if isinstance(op, (ast.Gt, ast.GtE)):
+                        lo_side, hi_side = rhs, lhs
+                        op = ast.Lt() if isinstance(op, ast.Gt) else (
+                            ast.LtE()
+                        )
+                    if not (lo_side.bounded and hi_side.bounded):
+                        state.status = "unproved"
+                        state.message = (
+                            f"bound '{c.text}' cannot be proved: an "
+                            "operand has no derivable finite range"
+                        )
+                        worst = None
+                        break
+                    strict = isinstance(op, ast.Lt)
+                    ok = (
+                        lo_side.hi < hi_side.lo if strict
+                        else lo_side.hi <= hi_side.lo
+                    )
+                    entry = {
+                        "geometry": gid,
+                        "max": _num(lo_side.hi),
+                        "limit": _num(hi_side.lo),
+                        "holds": bool(ok),
+                    }
+                    if k is not None:
+                        entry["k"] = k
+                    if worst is None or entry["max"] - entry["limit"] > (
+                        worst["max"] - worst["limit"]
+                    ):
+                        worst = entry
+                    if not ok and state.status != "violated":
+                        state.status = "violated"
+                        state.message = _violation_msg(
+                            state.rule, c.text, geo, gid, entry
+                        )
+                if worst is not None:
+                    holds = worst.pop("holds")
+                    (state.proofs if holds else state.failures).append(
+                        worst
+                    )
+
+            for qual, ns_list in narrow_by_fn.items():
+                fn_obs = obs.get(qual, {})
+                for ns in ns_list:
+                    state = narrow_states[(qual, ns.line, ns.col)]
+                    got = fn_obs.get((ns.line, ns.col))
+                    if got is None or not got.bounded:
+                        continue
+                    dlo, dhi = _DTYPE_RANGES[ns.dtype]
+                    fits = dlo <= got.lo and got.hi <= dhi
+                    entry = {
+                        "geometry": gid,
+                        "max": _num(got.hi),
+                        "min": _num(got.lo),
+                        "limit": dhi,
+                    }
+                    if fits:
+                        if state.status == "underived":
+                            state.status = "proved"
+                        state.proofs.append(entry)
+                    else:
+                        state.failures.append(entry)
+                        if state.status != "violated":
+                            state.status = "violated"
+                            state.message = (
+                                f"{ns.form}{ns.dtype} narrows an operand "
+                                f"with derived range {got} outside "
+                                f"{ns.dtype}'s [{dlo}, {dhi}] at geometry "
+                                f"{geo.ident()} — silent wraparound"
+                            )
+
+        sites.extend(bound_states.values())
+        sites.extend(narrow_states.values())
+
+    sites.sort(key=lambda s: s.sort_key)
+    for s in sites:
+        s.proofs.sort(key=lambda p: (p["geometry"], p.get("k", -1)))
+        s.failures.sort(key=lambda p: (p["geometry"], p.get("k", -1)))
+    return RangeResult(
+        geometries=geometries, excluded=excluded, sites=sites
+    )
+
+
+def _mark_skip(state: SiteResult, gid: str, reason: str) -> None:
+    state.failures.append({"geometry": gid, "skipped": reason})
+    if state.status == "proved" and not state.proofs:
+        state.status = "skipped"
+
+
+def _num(v: float) -> float | int:
+    if isinstance(v, float) and v.is_integer() and abs(v) < 2**53:
+        return int(v)
+    return v
+
+
+def _violation_msg(
+    rule: str, text: str, geo: GeometryPoint, gid: str, entry: dict
+) -> str:
+    at_k = f", K={entry['k']}" if "k" in entry else ""
+    if rule == "CIM601":
+        return (
+            f"f32-exactness overflow: bound '{text}' fails at "
+            f"geometry {gid} ({geo.ident()}{at_k}) — derived max "
+            f"{entry['max']} reaches limit {entry['limit']}; the "
+            "packed/accumulated integer exceeds the f32 mantissa "
+            "(silent precision loss, not an error)"
+        )
+    return (
+        f"range bound '{text}' fails at geometry {gid} "
+        f"({geo.ident()}{at_k}) — derived max {entry['max']} exceeds "
+        f"limit {entry['limit']} (silent saturation past a "
+        "non-raising guard)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Certificate
+# ---------------------------------------------------------------------------
+
+
+def certificate_payload(project: Project, root: Path | None) -> dict:
+    """The deterministic range-certificate document."""
+    res = analyze_ranges(project, root)
+    gids = {g.key: f"g{i:03d}" for i, g in enumerate(res.geometries)}
+    geoms = {}
+    for g in res.geometries:
+        d = g.to_dict()
+        d["ident"] = g.ident()
+        geoms[gids[g.key]] = d
+    site_rows = []
+    counts = {
+        "proved": 0, "violated": 0, "unproved": 0, "skipped": 0,
+        "underived": 0,
+    }
+    for s in res.sites:
+        mod = project.modules.get(s.module)
+        path = (
+            rel_path(mod.path, root) if mod is not None and root is not None
+            else (str(mod.path) if mod is not None else s.module)
+        )
+        counts[s.status] = counts.get(s.status, 0) + 1
+        site_rows.append({
+            "path": path,
+            "line": s.line,
+            "symbol": s.symbol,
+            "rule": s.rule,
+            "kind": s.kind,
+            "expr": s.expr,
+            "status": s.status,
+            "proofs": s.proofs,
+            "failures": s.failures,
+        })
+    return {
+        "schema": CERT_SCHEMA_VERSION,
+        "geometries": geoms,
+        "excluded": res.excluded,
+        "sites": site_rows,
+        "counts": dict(counts, geometries=len(res.geometries)),
+    }
+
+
+def render_certificate(payload: dict) -> str:
+    import json
+
+    return json.dumps(payload, indent=2, sort_keys=True) + "\n"

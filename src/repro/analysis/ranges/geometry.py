@@ -1,0 +1,451 @@
+"""Geometry binder: every concrete operating point the certifier proves.
+
+The ``# bound:`` contracts are closed-form comparisons over operating-
+point quantities (``pmac_max``, ``stride``, ``adc_step``, merged-code
+ranges, contraction depth). This module supplies the concrete points to
+evaluate them at:
+
+* **mirrors** — pure-Python re-statements of the derived math in
+  ``core.params.CIMConfig`` (properties), ``core.quant.slot_spec`` and
+  ``core.variants.merged_quant``. ``repro.analysis`` is stdlib-only by
+  contract (no jax import, CI runs it on a bare interpreter), so the
+  formulas are mirrored rather than imported; a tier-1 test
+  cross-validates every mirror against the jax-importing originals over
+  the full enumerated grid, so drift between the two is a test failure,
+  not silent mis-certification.
+* **the binder** — :func:`enumerate_geometries` crosses the variant
+  registry (extracted from the analyzed AST, the same way CIM301 reads
+  it) with the committed ``configs/sweeps/*.json`` axes/params grids and
+  the paper's published operating points. Points whose construction
+  would *raise* in the real code (invalid config, non-integer reference
+  step, reference level beyond the array range) are excluded and
+  recorded with their reason — a raising guard is the documented safe
+  behavior (the PR 2 bug class), so excluded points are part of the
+  certificate, not silently dropped.
+
+Contraction-depth-dependent bounds (names ``K``/``G``) are evaluated at
+every K in a geometry's ``k_values`` — the shape axes of the committed
+sweeps plus the paper's decode cell depth.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import math
+from pathlib import Path
+
+# f32 mantissa width — mirrors core.quant._F32_EXACT_BITS.
+F32_EXACT_BITS = 24
+
+# Defaults mirror CIMConfig's field defaults (cross-validated in tests).
+_DEFAULTS = {
+    "rows_per_group": 16,
+    "rows_active": 16,
+    "act_bits": 4,
+    "weight_bits": 8,
+    "adc_bits": 4,
+    "cutoff": 0.5,
+    "coarse_bits": 1,
+}
+
+# The paper's decode cell depth — every geometry is proved at least here.
+_DEFAULT_KS = (1024,)
+
+# Sweep-config keys (axes or params) that map onto geometry fields.
+_FIELD_KEYS = ("rows_active", "adc_bits", "cutoff", "coarse_bits")
+
+
+class GeometryInfeasible(Exception):
+    """Raised by a mirror when the real constructor/generator raises."""
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python mirrors of the derived operating-point math
+# ---------------------------------------------------------------------------
+
+
+def mirror_slot_spec(
+    rows: int, act_bits: int, weight_bits: int
+) -> tuple[int, int, int] | None:
+    """(stride, per_slot, n_slots) — mirrors core.quant.slot_spec."""
+    pmac_max = rows * ((1 << act_bits) - 1)
+    field_bits = max(1, pmac_max.bit_length())
+    per_slot = F32_EXACT_BITS // field_bits
+    if per_slot < 1:
+        return None
+    per_slot = min(per_slot, weight_bits)
+    n_slots = -(-weight_bits // per_slot)
+    return (1 << field_bits, per_slot, n_slots)
+
+
+def mirror_merged_quant(
+    weight_bits: int, pmac_max: int, adc_bits: int, q_full: int,
+    cutoff: float,
+) -> dict:
+    """Merged-conversion constants — mirrors core.variants.merged_quant."""
+    m_min = -(1 << (weight_bits - 1)) * pmac_max
+    m_max = ((1 << (weight_bits - 1)) - 1) * pmac_max
+    levels = m_max - m_min + 1
+    q_merged = max(1, math.ceil(math.log2(levels)))
+    bits_eff = adc_bits + (q_merged - q_full)
+    threshold = max(1, int(round((1.0 - cutoff) * (1 << q_merged))))
+    step = threshold / (1 << bits_eff)
+    return {
+        "m_min": m_min,
+        "m_max": m_max,
+        "merged_levels": levels,
+        "q_merged": q_merged,
+        "bits_eff": bits_eff,
+        "merged_step": step,
+        "code_min": -(1 << (bits_eff - 1)),
+        "code_max": (1 << (bits_eff - 1)) - 1,
+    }
+
+
+def mirror_config(
+    *,
+    rows_per_group: int,
+    rows_active: int,
+    act_bits: int,
+    weight_bits: int,
+    adc_bits: int,
+    cutoff: float,
+    coarse_bits: int,
+) -> dict:
+    """Derived quantities of one operating point (CIMConfig mirror).
+
+    Raises :class:`GeometryInfeasible` exactly where the real code
+    raises: ``CIMConfig.__post_init__`` validation, and the in-SRAM
+    reference generation feasibility of ``adc.reference_input_code`` /
+    ``adc.reference_patterns``.
+    """
+    if rows_active < 1:
+        raise GeometryInfeasible("rows_active must be >= 1")
+    if rows_active > rows_per_group:
+        raise GeometryInfeasible(
+            f"rows_active={rows_active} exceeds rows_per_group="
+            f"{rows_per_group}"
+        )
+    if act_bits < 1 or weight_bits < 1:
+        raise GeometryInfeasible("act_bits and weight_bits must be >= 1")
+    if not (0.0 <= cutoff < 1.0):
+        raise GeometryInfeasible(f"cutoff={cutoff} outside [0, 1)")
+    act_levels = 1 << act_bits
+    act_max = act_levels - 1
+    pmac_max = rows_active * act_max
+    pmac_levels = pmac_max + 1
+    q_full = max(1, math.ceil(math.log2(pmac_levels)))
+    if not (1 <= adc_bits <= q_full):
+        raise GeometryInfeasible(
+            f"adc_bits={adc_bits} outside [1, {q_full}]"
+        )
+    if not (0 <= coarse_bits <= adc_bits):
+        raise GeometryInfeasible(
+            f"coarse_bits={coarse_bits} outside [0, {adc_bits}]"
+        )
+    threshold = max(1, int(round((1.0 - cutoff) * (1 << q_full))))
+    adc_codes = 1 << adc_bits
+    adc_step = threshold / adc_codes
+    # adc.reference_input_code: non-integer pMAC spacing raises.
+    if abs(adc_step - round(adc_step)) > 1e-9:
+        raise GeometryInfeasible(
+            f"adc_step={adc_step} is not an integer pMAC spacing"
+        )
+    # adc.reference_patterns: the top reference level must be sinkable
+    # by the rows_per_group arrays (the PR 2 raising guard).
+    top_level = (adc_codes - 1) * round(adc_step)
+    if top_level > rows_per_group * act_max:
+        raise GeometryInfeasible(
+            f"reference level pMAC={top_level} exceeds "
+            f"{rows_per_group} arrays x act_max={act_max}"
+        )
+    symbols: dict[str, float] = {
+        "rows_per_group": rows_per_group,
+        "rows_active": rows_active,
+        "rows": rows_active,  # contract-side alias
+        "act_bits": act_bits,
+        "weight_bits": weight_bits,
+        "adc_bits": adc_bits,
+        "coarse_bits": coarse_bits,
+        "cutoff": cutoff,
+        "act_levels": act_levels,
+        "act_max": act_max,
+        "pmac_max": pmac_max,
+        "pmac_levels": pmac_levels,
+        "q_full": q_full,
+        "threshold": threshold,
+        "adc_codes": adc_codes,
+        "adc_step": adc_step,
+    }
+    slot = mirror_slot_spec(rows_active, act_bits, weight_bits)
+    if slot is not None:
+        symbols["stride"], symbols["per_slot"], symbols["n_slots"] = slot
+    symbols.update(mirror_merged_quant(
+        weight_bits, pmac_max, adc_bits, q_full, cutoff,
+    ))
+    return symbols
+
+
+# ---------------------------------------------------------------------------
+# Geometry points
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryPoint:
+    """One concrete (variant, operating point) the certifier proves."""
+
+    variant: str
+    merged: bool  # single-ADC merged conversion (per_plane_adc=False)
+    rows_per_group: int
+    rows_active: int
+    act_bits: int
+    weight_bits: int
+    adc_bits: int
+    cutoff: float
+    coarse_bits: int
+    k_values: tuple[int, ...] = _DEFAULT_KS
+    sources: tuple[str, ...] = ()
+
+    @property
+    def key(self) -> tuple:
+        return (
+            self.variant, self.rows_per_group, self.rows_active,
+            self.act_bits, self.weight_bits, self.adc_bits, self.cutoff,
+            self.coarse_bits,
+        )
+
+    def ident(self) -> str:
+        return (
+            f"{self.variant}/r{self.rows_active}of{self.rows_per_group}"
+            f"/a{self.act_bits}w{self.weight_bits}/adc{self.adc_bits}"
+            f"c{self.coarse_bits}/cut{self.cutoff:g}"
+        )
+
+    def symbols(self, k: int | None = None) -> dict[str, float]:
+        syms = mirror_config(
+            rows_per_group=self.rows_per_group,
+            rows_active=self.rows_active,
+            act_bits=self.act_bits,
+            weight_bits=self.weight_bits,
+            adc_bits=self.adc_bits,
+            cutoff=self.cutoff,
+            coarse_bits=self.coarse_bits,
+        )
+        syms["f32_exact"] = 1 << F32_EXACT_BITS
+        if k is not None:
+            syms["K"] = k
+            syms["G"] = -(-k // self.rows_active)
+        return syms
+
+    def to_dict(self) -> dict:
+        d = {
+            "variant": self.variant,
+            "merged": self.merged,
+            "rows_per_group": self.rows_per_group,
+            "rows_active": self.rows_active,
+            "act_bits": self.act_bits,
+            "weight_bits": self.weight_bits,
+            "adc_bits": self.adc_bits,
+            "cutoff": self.cutoff,
+            "coarse_bits": self.coarse_bits,
+            "k_values": list(self.k_values),
+            "sources": list(self.sources),
+        }
+        slot = mirror_slot_spec(
+            self.rows_active, self.act_bits, self.weight_bits
+        )
+        d["slot"] = None if slot is None else {
+            "stride": slot[0], "per_slot": slot[1], "n_slots": slot[2],
+        }
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Variant extraction (AST, same shape CIM301 reads)
+# ---------------------------------------------------------------------------
+
+
+def variants_from_project(project) -> dict[str, bool]:
+    """variant name -> merged-conversion flag (per_plane_adc=False).
+
+    Reads ``MacroVariant(...)``/subclass constructor calls with a
+    literal ``name=`` from the analyzed AST. Trees that define no
+    variants (fixtures) fall back to a single per-plane default so the
+    contract machinery still runs.
+    """
+    from repro.analysis.rules.cim301_registry import (
+        _variant_class_names,
+        _variant_defs,
+    )
+
+    classes = _variant_class_names(project)
+    out: dict[str, bool] = {}
+    for mod in project.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            leaf = None
+            if isinstance(node.func, ast.Name):
+                leaf = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                leaf = node.func.attr
+            if leaf not in classes:
+                continue
+            name = None
+            per_plane = True
+            for kw in node.keywords:
+                if kw.arg == "name" and isinstance(
+                    kw.value, ast.Constant
+                ) and isinstance(kw.value.value, str):
+                    name = kw.value.value
+                if kw.arg == "per_plane_adc" and isinstance(
+                    kw.value, ast.Constant
+                ) and isinstance(kw.value.value, bool):
+                    per_plane = kw.value.value
+            if name is not None:
+                out.setdefault(name, not per_plane)
+    # Keep parity with CIM301's site view (defensive: _variant_defs is
+    # the contract CIM301 enforces; a name it sees must appear here).
+    for name in _variant_defs(project, classes):
+        out.setdefault(name, False)
+    if not out:
+        out = {"p8t": False}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sweep-grid parsing
+# ---------------------------------------------------------------------------
+
+
+def _as_list(v) -> list:
+    return v if isinstance(v, list) else [v]
+
+
+def _sweep_points(cfg: dict, variants: dict[str, bool]) -> list[dict]:
+    """Cross product of one sweep config's geometry-relevant axes."""
+    axes = cfg.get("axes", {}) or {}
+    params = cfg.get("params", {}) or {}
+    fields: dict[str, list] = {}
+    for key in _FIELD_KEYS:
+        vals = axes.get(key, params.get(key))
+        if vals is None:
+            continue
+        vals = [v for v in _as_list(vals) if isinstance(v, (int, float))]
+        if vals:
+            fields[key] = vals
+    var_axis = [
+        v for v in _as_list(axes.get("variant", list(variants)))
+        if isinstance(v, str)
+    ] or list(variants)
+    ks = sorted({
+        int(shape[1])
+        for shape in _as_list(axes.get("shape", []))
+        if isinstance(shape, (list, tuple)) and len(shape) == 3
+        and isinstance(shape[1], int)
+    })
+    points: list[dict] = [{}]
+    for key, vals in sorted(fields.items()):
+        points = [dict(p, **{key: v}) for p in points for v in vals]
+    return [
+        dict(p, variant=v, k_values=tuple(ks) if ks else None)
+        for p in points
+        for v in var_axis
+    ]
+
+
+def _load_sweep_configs(root: Path | None) -> list[tuple[str, dict]]:
+    if root is None:
+        return []
+    sweeps = Path(root) / "configs" / "sweeps"
+    if not sweeps.is_dir():
+        return []
+    out: list[tuple[str, dict]] = []
+    for f in sorted(sweeps.glob("*.json")):
+        try:
+            cfg = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        if isinstance(cfg, dict):
+            out.append((f.stem, cfg))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The binder
+# ---------------------------------------------------------------------------
+
+
+def enumerate_geometries(
+    project, root: Path | None
+) -> tuple[list[GeometryPoint], list[dict]]:
+    """All provable geometry points, plus the excluded-point records.
+
+    Sources: the paper's published operating points (always), crossed
+    with every committed sweep grid under ``<root>/configs/sweeps/``.
+    Excluded points carry the reason the real code would raise.
+    """
+    variants = variants_from_project(project)
+    candidates: list[tuple[str, dict]] = []
+    for rows in (16, 8):  # PAPER_OP_16ROWS / PAPER_OP_8ROWS
+        for v in sorted(variants):
+            candidates.append((
+                f"paper:{rows}rows",
+                {"variant": v, "rows_active": rows, "k_values": None},
+            ))
+    for name, cfg in _load_sweep_configs(root):
+        for p in _sweep_points(cfg, variants):
+            candidates.append((f"sweep:{name}", p))
+
+    merged_pts: dict[tuple, dict] = {}
+    excluded: dict[tuple, dict] = {}
+    for source, cand in candidates:
+        fields = dict(_DEFAULTS)
+        for key in _FIELD_KEYS:
+            if cand.get(key) is not None:
+                fields[key] = cand[key]
+        variant = cand["variant"]
+        if variant not in variants:
+            continue  # CIM301's reverse-drift leg owns unknown names
+        point = GeometryPoint(
+            variant=variant,
+            merged=variants[variant],
+            rows_per_group=int(fields["rows_per_group"]),
+            rows_active=int(fields["rows_active"]),
+            act_bits=int(fields["act_bits"]),
+            weight_bits=int(fields["weight_bits"]),
+            adc_bits=int(fields["adc_bits"]),
+            cutoff=float(fields["cutoff"]),
+            coarse_bits=int(fields["coarse_bits"]),
+        )
+        try:
+            point.symbols()
+        except GeometryInfeasible as e:
+            entry = excluded.setdefault(point.key, {
+                "point": point.ident(), "reason": str(e), "sources": [],
+            })
+            if source not in entry["sources"]:
+                entry["sources"].append(source)
+            continue
+        ks = set(cand.get("k_values") or ()) | set(_DEFAULT_KS)
+        prev = merged_pts.get(point.key)
+        if prev is None:
+            merged_pts[point.key] = {
+                "point": point, "ks": ks, "sources": {source},
+            }
+        else:
+            prev["ks"] |= ks
+            prev["sources"].add(source)
+
+    points = [
+        dataclasses.replace(
+            entry["point"],
+            k_values=tuple(sorted(entry["ks"])),
+            sources=tuple(sorted(entry["sources"])),
+        )
+        for _, entry in sorted(merged_pts.items())
+    ]
+    return points, [excluded[k] for k in sorted(excluded)]

@@ -1,0 +1,161 @@
+"""Closed numeric intervals — the range certifier's abstract domain.
+
+Every abstract value is an over-approximation ``[lo, hi]`` of the
+concrete values a quantity can take; ``±inf`` endpoints encode one-sided
+or total ignorance (``TOP``). All operators are sound in the usual
+interval-arithmetic sense: the result interval contains every value the
+concrete operator could produce from operands in the input intervals.
+Soundness is what lets CIM601/602/603 *prove* bounds: ``x.hi < limit``
+implies every concrete ``x`` is below ``limit``.
+
+Endpoints stay Python ints whenever both inputs are ints — the bounds
+being certified (2**24 mantissa limits, packed-field products) exceed
+f64's exact-integer range in adversarial fixtures, and arbitrary
+precision keeps the comparisons exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+_INF = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    lo: float
+    hi: float
+
+    def __post_init__(self) -> None:
+        if self.lo > self.hi:  # pragma: no cover - constructor misuse
+            raise ValueError(f"empty interval [{self.lo}, {self.hi}]")
+
+    @property
+    def bounded(self) -> bool:
+        return self.lo != -_INF and self.hi != _INF
+
+    @property
+    def is_top(self) -> bool:
+        return self.lo == -_INF and self.hi == _INF
+
+    @property
+    def concrete(self) -> float | None:
+        """The single value this interval holds, if exactly one."""
+        return self.lo if self.lo == self.hi else None
+
+    def __repr__(self) -> str:  # compact in finding messages
+        return f"[{self.lo}, {self.hi}]"
+
+
+TOP = Interval(-_INF, _INF)
+NON_NEGATIVE = Interval(0, _INF)
+
+
+def const(v: float) -> Interval:
+    return Interval(v, v)
+
+
+def join(a: Interval, b: Interval) -> Interval:
+    return Interval(min(a.lo, b.lo), max(a.hi, b.hi))
+
+
+def add(a: Interval, b: Interval) -> Interval:
+    return Interval(a.lo + b.lo, a.hi + b.hi)
+
+
+def sub(a: Interval, b: Interval) -> Interval:
+    return Interval(a.lo - b.hi, a.hi - b.lo)
+
+
+def neg(a: Interval) -> Interval:
+    return Interval(-a.hi, -a.lo)
+
+
+def _mul(x: float, y: float) -> float:
+    # inf * 0 is 0 here: the concrete factor really is 0, so the
+    # product is 0 regardless of how unbounded the other side is.
+    if x == 0 or y == 0:
+        return 0
+    return x * y
+
+
+def mul(a: Interval, b: Interval) -> Interval:
+    prods = [
+        _mul(a.lo, b.lo), _mul(a.lo, b.hi),
+        _mul(a.hi, b.lo), _mul(a.hi, b.hi),
+    ]
+    return Interval(min(prods), max(prods))
+
+
+def _div(x: float, y: float, floor: bool) -> float:
+    if x in (_INF, -_INF) or y in (_INF, -_INF):
+        q = 0.0 if y in (_INF, -_INF) else (
+            _INF if (x > 0) == (y > 0) else -_INF
+        )
+        return q
+    return x // y if floor else x / y
+
+
+def div(a: Interval, b: Interval, *, floor: bool = False) -> Interval:
+    if b.lo <= 0 <= b.hi:
+        return TOP  # divisor may be 0 (or cross it): give up soundly
+    quots = [
+        _div(a.lo, b.lo, floor), _div(a.lo, b.hi, floor),
+        _div(a.hi, b.lo, floor), _div(a.hi, b.hi, floor),
+    ]
+    return Interval(min(quots), max(quots))
+
+
+def mod(a: Interval, b: Interval) -> Interval:
+    if b.lo <= 0:
+        return TOP
+    if not b.bounded:
+        return TOP if a.lo < 0 else Interval(0, a.hi)
+    return Interval(0 if a.lo >= 0 else -(b.hi - 1), b.hi - 1)
+
+
+def pow_(a: Interval, b: Interval) -> Interval:
+    e = b.concrete
+    if e is None or e != int(e) or e < 0 or not a.bounded:
+        return TOP
+    e = int(e)
+    cands = [a.lo ** e, a.hi ** e]
+    if a.lo < 0 < a.hi and e % 2 == 0:
+        cands.append(0)
+    return Interval(min(cands), max(cands))
+
+
+def clamp(a: Interval, lo: Interval, hi: Interval) -> Interval:
+    """clip(a, lo, hi): result is within [lo.lo, hi.hi] regardless of a."""
+    if not lo.bounded or not hi.bounded:
+        return a
+    new_lo = min(max(a.lo, lo.lo), hi.hi)
+    new_hi = max(min(a.hi, hi.hi), lo.lo)
+    return Interval(min(new_lo, new_hi), max(new_lo, new_hi))
+
+
+def abs_(a: Interval) -> Interval:
+    cands = [abs(a.lo), abs(a.hi)]
+    lo = 0 if a.lo <= 0 <= a.hi else min(cands)
+    return Interval(lo, max(cands))
+
+
+def floor_(a: Interval) -> Interval:
+    lo = a.lo if a.lo in (-_INF, _INF) else math.floor(a.lo)
+    hi = a.hi if a.hi in (-_INF, _INF) else math.floor(a.hi)
+    return Interval(lo, hi)
+
+
+def round_(a: Interval) -> Interval:
+    lo = a.lo if a.lo in (-_INF, _INF) else math.floor(a.lo)
+    hi = a.hi if a.hi in (-_INF, _INF) else math.ceil(a.hi)
+    return Interval(lo, hi)
+
+
+def min_(a: Interval, b: Interval) -> Interval:
+    return Interval(min(a.lo, b.lo), min(a.hi, b.hi))
+
+
+def max_(a: Interval, b: Interval) -> Interval:
+    return Interval(max(a.lo, b.lo), max(a.hi, b.hi))

@@ -13,6 +13,9 @@ from repro.analysis.rules import (
     cim301_registry,
     cim401_fallback,
     cim501_donation,
+    cim601_overflow,
+    cim602_saturation,
+    cim603_narrowing,
 )
 
 ALL_RULES = (
@@ -21,6 +24,9 @@ ALL_RULES = (
     cim301_registry.Rule(),
     cim401_fallback.Rule(),
     cim501_donation.Rule(),
+    cim601_overflow.Rule(),
+    cim602_saturation.Rule(),
+    cim603_narrowing.Rule(),
 )
 
 RULE_IDS = tuple(r.id for r in ALL_RULES)

@@ -27,7 +27,16 @@ skipped) when it is provably not a traced array:
   never tracers, and the whole calibration machinery relies on it;
 * locals derived only from the above (single textual pass), including
   through the known spec producers ``as_spec``/``merged_quant`` and
-  ``.replace(...)`` on a static value.
+  ``.replace(...)`` on a static value;
+* parameters that are static *by flow*: when every resolvable project
+  call site of a helper passes a provably-static expression for a
+  parameter (and no site uses ``*args``/``**kwargs``), the parameter
+  is static inside the helper even without an annotation — a ``cfg``
+  threaded through an un-annotated utility no longer needs a ``# noqa``
+  or a decorative annotation. Computed as a fixed point over the call
+  graph, so staticness flows through chains of helpers;
+* names closed over from an enclosing function's static set (a nested
+  jit body reading its outer function's config parameter).
 
 Anything rooted in ``jax.*``/``jnp.*`` or otherwise unresolvable is
 flagged. Intentional host-side reads inside a reachable function take
@@ -77,6 +86,7 @@ class Rule:
     )
 
     def check(self, project: Project) -> Iterator[Finding]:
+        cross = _cross_call_statics(project)
         for qual, (via, origin) in sorted(project.reachable.items()):
             info = project.functions.get(qual)
             if info is None:
@@ -84,13 +94,20 @@ class Rule:
             mod = project.modules.get(info.module)
             if mod is None:
                 continue
-            yield from _scan_function(mod, info, via, origin)
+            yield from _scan_function(
+                mod, info, via, origin,
+                seed=_effective_statics(info, project, cross),
+            )
 
 
 def _scan_function(
-    mod: Module, info: FunctionInfo, via: str, origin: str
+    mod: Module,
+    info: FunctionInfo,
+    via: str,
+    origin: str,
+    seed: set[str] | None = None,
 ) -> Iterator[Finding]:
-    statics = _initial_statics(info)
+    statics = set(seed) if seed is not None else _initial_statics(info)
     body = (
         info.node.body
         if isinstance(info.node.body, list)
@@ -290,11 +307,13 @@ def _is_static_expr(
                 return _args_static(node, mod, statics)
             if name in _SPEC_PRODUCERS:
                 return _args_static(node, mod, statics)
-        if isinstance(node.func, ast.Attribute):
+        if (
+            isinstance(node.func, ast.Attribute)
             # spec.replace(...) on a static value stays static.
-            if node.func.attr in {"replace", "evolve"} | _SPEC_PRODUCERS:
-                if _is_static_expr(node.func.value, mod, statics):
-                    return _args_static(node, mod, statics)
+            and node.func.attr in {"replace", "evolve"} | _SPEC_PRODUCERS
+            and _is_static_expr(node.func.value, mod, statics)
+        ):
+            return _args_static(node, mod, statics)
         return False
     if isinstance(node, ast.BinOp):
         return _is_static_expr(node.left, mod, statics) and _is_static_expr(
@@ -329,3 +348,147 @@ def _args_static(
     ) and all(
         _is_static_expr(k.value, mod, statics) for k in call.keywords
     )
+
+
+# ---------------------------------------------------------------------------
+# Cross-call static flow (annotation flow through un-annotated helpers)
+# ---------------------------------------------------------------------------
+
+_CROSS_ROUNDS = 10  # fixed-point cap; helper chains are far shallower
+
+
+def _param_order(fn: ast.AST) -> tuple[list, object, list] | None:
+    args = getattr(fn, "args", None)
+    if args is None:
+        return None
+    return (
+        args.posonlyargs + args.args, args.vararg, args.kwonlyargs
+    )
+
+
+def _bind_call(
+    call: ast.Call, fn: ast.AST
+) -> tuple[dict[str, ast.AST], dict[str, ast.AST]] | None:
+    """Map a call's arguments onto the callee's parameters.
+
+    Returns ``(explicit, defaulted)`` — explicit exprs evaluate in the
+    *caller's* context, default exprs in the *callee's*. ``None`` when
+    the site cannot be mapped statically (``*args``/``**kwargs`` on the
+    call, unknown keyword, extra positionals without a vararg).
+    """
+    order = _param_order(fn)
+    if order is None:
+        return None
+    pos_params, vararg, kw_params = order
+    if any(isinstance(a, ast.Starred) for a in call.args) or any(
+        k.arg is None for k in call.keywords
+    ):
+        return None
+    explicit: dict[str, ast.AST] = {}
+    if len(call.args) > len(pos_params) and vararg is None:
+        return None
+    # Prefix semantics: fewer args than params is a legal partial bind.
+    for p, a in zip(pos_params, call.args, strict=False):
+        explicit[p.arg] = a
+    known = {p.arg for p in pos_params + kw_params}
+    for k in call.keywords:
+        if k.arg not in known or k.arg in explicit:
+            return None
+        explicit[k.arg] = k.value
+    defaulted: dict[str, ast.AST] = {}
+    args = fn.args
+    # Positional defaults align with the tail of the positional params.
+    for p, d in zip(pos_params[len(pos_params) - len(args.defaults):],
+                    args.defaults, strict=True):
+        if p.arg not in explicit:
+            defaulted[p.arg] = d
+    for p, d in zip(kw_params, args.kw_defaults, strict=True):
+        if p.arg not in explicit and d is not None:
+            defaulted[p.arg] = d
+    # A parameter with neither a value nor a default would be a runtime
+    # TypeError; leave it out (it simply never becomes static).
+    return explicit, defaulted
+
+
+def _effective_statics(
+    info: FunctionInfo,
+    project: Project,
+    cross: dict[str, frozenset[str]],
+) -> set[str]:
+    """Annotation/jit statics + cross-call flow + enclosing closures."""
+    statics = _initial_statics(info)
+    statics |= cross.get(info.qualname, frozenset())
+    # Closed-over names: an enclosing function's statics are visible
+    # unless shadowed by this function's own parameters.
+    parts = info.qualname.split(".<locals>.")
+    if len(parts) > 1:
+        own_params = set()
+        order = _param_order(info.node)
+        if order is not None:
+            pos, _, kw = order
+            own_params = {p.arg for p in pos + kw}
+        for depth in range(1, len(parts)):
+            outer = project.functions.get(
+                ".<locals>.".join(parts[:depth])
+            )
+            if outer is None:
+                continue
+            outer_statics = _initial_statics(outer) | cross.get(
+                outer.qualname, frozenset()
+            )
+            statics |= outer_statics - own_params
+    return statics
+
+
+def _cross_call_statics(
+    project: Project,
+) -> dict[str, frozenset[str]]:
+    """param names static at EVERY resolvable call site, per function.
+
+    Fixed point: a helper's parameter is static-by-flow when all
+    project call sites pass expressions that are static in their
+    caller's effective environment — which itself may include
+    flow-derived statics, so staticness propagates through helper
+    chains (capped at ``_CROSS_ROUNDS``).
+    """
+    sites: dict[str, list[tuple[FunctionInfo, ast.Call]]] = {}
+    for qual in sorted(project.functions):
+        info = project.functions[qual]
+        for callee, call in info.call_sites:
+            if callee in project.functions and callee != qual:
+                sites.setdefault(callee, []).append((info, call))
+
+    cross: dict[str, frozenset[str]] = {}
+    for _ in range(_CROSS_ROUNDS):
+        changed = False
+        for callee_q in sorted(sites):
+            callee = project.functions[callee_q]
+            callee_mod = project.modules.get(callee.module)
+            agreed: set[str] | None = None
+            for caller, call in sites[callee_q]:
+                mod = project.modules.get(caller.module)
+                if mod is None or callee_mod is None:
+                    agreed = set()
+                    break
+                bound = _bind_call(call, callee.node)
+                if bound is None:
+                    agreed = set()
+                    break
+                explicit, defaulted = bound
+                env = _effective_statics(caller, project, cross)
+                here = {
+                    p for p, expr in explicit.items()
+                    if _is_static_expr(expr, mod, env)
+                }
+                here |= {
+                    p for p, expr in defaulted.items()
+                    if _is_static_expr(expr, callee_mod, set())
+                }
+                agreed = here if agreed is None else agreed & here
+            new = frozenset(agreed or set())
+            if new - cross.get(callee_q, frozenset()):
+                cross[callee_q] = new | cross.get(callee_q, frozenset())
+                changed = True
+        if not changed:
+            break
+    return cross

@@ -97,9 +97,8 @@ def _scan_module(mod: Module) -> Iterator[Finding]:
         # are exempted below either way).
         if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
             isinstance(node.targets[0], ast.Name)
-        ):
-            if _is_set_expr(node.value, mod, set_locals):
-                set_locals.add(node.targets[0].id)
+        ) and _is_set_expr(node.value, mod, set_locals):
+            set_locals.add(node.targets[0].id)
 
     for node in ast.walk(mod.tree):
         if isinstance(node, ast.Call):

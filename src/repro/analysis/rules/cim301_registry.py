@@ -241,22 +241,62 @@ def _anchor_variants(project: Project) -> dict[str, _Site]:
     return out
 
 
-def _tested_names(tests_dir: Path | None) -> set[str] | None:
-    """Full source text of the tests tree; None = no tests to check."""
+def _tested_names(tests_dir: Path | None) -> object | None:
+    """String literals referenced by the tests tree; None = no tests.
+
+    An AST walk, not a text scan: only string ``Constant`` nodes count
+    (call arguments, parametrize ids, dict keys, f-string pieces), with
+    docstrings excluded. A variant name that appears solely in a test
+    docstring or comment is documentation, not coverage — the textual
+    scan this replaced let exactly that drift pass.
+    """
     if tests_dir is None or not tests_dir.is_dir():
         return None
-    blob = []
+    literals: list[str] = []
+    parsed = False
     for f in sorted(tests_dir.rglob("*.py")):
         try:
-            blob.append(f.read_text())
-        except (OSError, UnicodeDecodeError):
+            tree = ast.parse(f.read_text())
+        except (OSError, UnicodeDecodeError, SyntaxError):
             continue
-    if not blob:
+        parsed = True
+        docstrings = _docstring_nodes(tree)
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node not in docstrings
+            ):
+                literals.append(node.value)
+    if not parsed:
         return None
-    text = "\n".join(blob)
 
     class _Contains:
+        # Substring containment: tests reference dotted/derived forms
+        # ("p8t/r16of16" idents, KernelKey reprs) as well as the bare
+        # variant name.
         def __contains__(self, name: str) -> bool:
-            return name in text
+            return any(name in lit for lit in literals)
 
-    return _Contains()  # duck-typed set-ish view
+    return _Contains()
+
+
+def _docstring_nodes(tree: ast.Module) -> set[ast.Constant]:
+    """The Constant nodes that are module/class/function docstrings."""
+    out: set[ast.Constant] = set()
+    for node in ast.walk(tree):
+        if not isinstance(
+            node,
+            (ast.Module, ast.ClassDef, ast.FunctionDef,
+             ast.AsyncFunctionDef),
+        ):
+            continue
+        body = node.body
+        if (
+            body
+            and isinstance(body[0], ast.Expr)
+            and isinstance(body[0].value, ast.Constant)
+            and isinstance(body[0].value.value, str)
+        ):
+            out.add(body[0].value)
+    return out

@@ -8,22 +8,34 @@ only on the donating execution path. ``serve.engine`` documents this
 contract ("self.params MUST be rebound"); this rule enforces the
 caller side of it.
 
-Per function scope (linear, textual order — loop back-edges are not
-modeled, an under-approximation that never false-positives):
+Per function scope, in execution order:
 
 * ``g = jax.jit(f, donate_argnums=(0, 3))`` binds ``g`` as a donating
   callable with those positions (``donate_argnames`` binds keyword
   names); a direct ``jax.jit(f, donate_argnums=...)(x)`` call is
-  handled the same way.
+  handled the same way. Module-level donating callables are visible
+  inside every function of the module.
 * at each call ``g(a, b, ...)``, plain-name arguments in donated
   positions are marked *consumed*;
 * a later ``Load`` of a consumed name flags, unless the name was
   re-bound first (``a = g(a, ...)`` is the idiomatic safe form: the
   store lands after the call).
 
+Loop back-edges ARE modeled: a ``for``/``while`` body's events are
+replayed once, so a consume on iteration N that the body never
+re-binds is caught when iteration N+1 reads the name —
+``out = step(state, b)`` inside a loop flags even though the consume
+textually follows nothing. Findings are de-duplicated per (site,
+name), so the replay never double-reports.
+
+One call hop is tracked for donating callables passed as arguments:
+when a project call site passes ``g`` (or an inline
+``jax.jit(..., donate_argnums=...)``) for a parameter, that parameter
+is a donating callable inside the callee, and its calls consume there.
+
 Attribute targets (``self.params``) are skipped — rebinding through
 ``self`` is the engine's documented pattern and instance state is
-beyond a linear scan.
+beyond this scan.
 """
 
 from __future__ import annotations
@@ -34,6 +46,7 @@ from typing import Iterator
 
 from repro.analysis.findings import Finding
 from repro.analysis.loader import Module, Project
+from repro.analysis.rules.cim101_tracer import _bind_call
 
 _JIT_NAMES = {"jax.jit", "jax.pmap", "pjit"}
 
@@ -52,64 +65,48 @@ class Rule:
     )
 
     def check(self, project: Project) -> Iterator[Finding]:
+        param_dons = _param_donators(project)
         for name in sorted(project.modules):
             mod = project.modules[name]
-            scopes: list[tuple[str, list[ast.stmt]]] = [
-                (mod.name, mod.tree.body)
-            ]
+            module_dons = _collect_donators(mod.tree.body, mod)
+            scopes: list[
+                tuple[str, list[ast.stmt], dict[str, _Donator]]
+            ] = [(mod.name, mod.tree.body, {})]
             for qual, info in mod.functions.items():
                 body = info.node.body
                 if isinstance(body, list):
-                    scopes.append((qual, body))
-            for symbol, body in scopes:
-                yield from _scan_scope(symbol, body, mod)
+                    seed = dict(module_dons)
+                    seed.update(param_dons.get(qual, {}))
+                    scopes.append((qual, body, seed))
+            for symbol, body, seed in scopes:
+                yield from _scan_scope(symbol, body, mod, seed)
 
 
 def _scan_scope(
-    symbol: str, body: list[ast.stmt], mod: Module
+    symbol: str,
+    body: list[ast.stmt],
+    mod: Module,
+    seed: dict[str, _Donator] | None = None,
 ) -> Iterator[Finding]:
-    donators: dict[str, _Donator] = {}
-    # (line, col, rank) ordering: a load at the consume site itself
-    # (the donated argument expression) sorts before the consume, and
-    # stores use statement END position so `x = g(x)` re-binds *after*
-    # the consume it contains.
-    events: list[tuple[tuple[int, int, int], str, str, ast.AST]] = []
+    # Donator bindings are pre-collected for the whole scope (a loop
+    # body's call must see a donator bound above the loop on replay).
+    donators = dict(seed or {})
+    donators.update(_collect_donators(body, mod))
+    events = _events(body, mod, donators)
 
-    for stmt in body:
-        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            # Its body is a separate scope entry; scanning it here too
-            # would double-report every finding.
-            continue
-        for node in _walk_no_nested(stmt):
-            if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
-                isinstance(node.targets[0], ast.Name)
-            ):
-                don = _donator_from(node.value, mod)
-                if don is not None:
-                    donators[node.targets[0].id] = don
-            if isinstance(node, ast.Call):
-                for name, pos in _consumed_names(node, mod, donators):
-                    events.append((pos + (1,), "consume", name, node))
-            if isinstance(node, ast.Name):
-                if isinstance(node.ctx, ast.Load):
-                    events.append((
-                        (node.lineno, node.col_offset, 0), "load",
-                        node.id, node,
-                    ))
-                elif isinstance(node.ctx, (ast.Store, ast.Del)):
-                    parent_end = _store_pos(stmt, node)
-                    events.append((parent_end + (2,), "store", node.id,
-                                   node))
-
-    events.sort(key=lambda e: e[0])
-    consumed: dict[str, tuple[int, int]] = {}
+    consumed: dict[str, tuple[int, int, int]] = {}
+    reported: set[tuple[int, int, str]] = set()
     for pos, kind, name, node in events:
         if kind == "consume":
             consumed[name] = pos
         elif kind == "store":
             consumed.pop(name, None)
         elif kind == "load" and name in consumed:
-            cline = consumed[name][0]
+            cline = consumed.pop(name)[0]  # one report per consume
+            key = (node.lineno, node.col_offset, name)
+            if key in reported:
+                continue  # the loop replay re-walks the same site
+            reported.add(key)
             yield Finding(
                 rule=Rule.id,
                 path="",
@@ -123,7 +120,141 @@ def _scan_scope(
                 ),
                 symbol=symbol,
             )
-            consumed.pop(name, None)  # one report per consume
+
+
+def _collect_donators(
+    body: list[ast.stmt], mod: Module
+) -> dict[str, _Donator]:
+    out: dict[str, _Donator] = {}
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in _walk_no_nested(stmt):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+                isinstance(node.targets[0], ast.Name)
+            ):
+                don = _donator_from(node.value, mod)
+                if don is not None:
+                    out[node.targets[0].id] = don
+    return out
+
+
+_Event = tuple[tuple[int, int, int], str, str, ast.AST]
+
+
+def _events(
+    stmts: list[ast.stmt],
+    mod: Module,
+    donators: dict[str, _Donator],
+) -> list[_Event]:
+    """Load/consume/store events in execution order.
+
+    Simple statements contribute their events position-sorted (loads
+    before same-site consumes, stores at statement end so ``x = g(x)``
+    re-binds after the consume). Compound statements are ordered
+    structurally; loop bodies are emitted twice — the second emission
+    is the back-edge, where iteration N's un-rebound consumes meet
+    iteration N+1's loads.
+    """
+    out: list[_Event] = []
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # Its body is a separate scope entry; scanning it here too
+            # would double-report every finding.
+            continue
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            out += _part_events(stmt.iter, mod, donators)
+            out += _part_events(stmt.target, mod, donators)
+            body_evs = _events(stmt.body, mod, donators)
+            out += body_evs + body_evs
+            out += _events(stmt.orelse, mod, donators)
+        elif isinstance(stmt, ast.While):
+            test_evs = _part_events(stmt.test, mod, donators)
+            body_evs = _events(stmt.body, mod, donators)
+            out += test_evs + body_evs + test_evs + body_evs
+            out += _events(stmt.orelse, mod, donators)
+        elif isinstance(stmt, ast.If):
+            out += _part_events(stmt.test, mod, donators)
+            out += _events(stmt.body, mod, donators)
+            out += _events(stmt.orelse, mod, donators)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                out += _part_events(item, mod, donators)
+            out += _events(stmt.body, mod, donators)
+        elif isinstance(stmt, ast.Try):
+            out += _events(stmt.body, mod, donators)
+            for handler in stmt.handlers:
+                out += _events(handler.body, mod, donators)
+            out += _events(stmt.orelse, mod, donators)
+            out += _events(stmt.finalbody, mod, donators)
+        else:
+            out += _part_events(stmt, mod, donators)
+    return out
+
+
+def _part_events(
+    part: ast.AST, mod: Module, donators: dict[str, _Donator]
+) -> list[_Event]:
+    evs: list[_Event] = []
+    for node in _walk_no_nested(part):
+        if isinstance(node, ast.Call):
+            for name, pos in _consumed_names(node, mod, donators):
+                evs.append((pos + (1,), "consume", name, node))
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                evs.append((
+                    (node.lineno, node.col_offset, 0), "load",
+                    node.id, node,
+                ))
+            elif isinstance(node.ctx, (ast.Store, ast.Del)):
+                evs.append((
+                    _store_pos(part, node) + (2,), "store", node.id, node,
+                ))
+    evs.sort(key=lambda e: e[0])
+    return evs
+
+
+def _param_donators(
+    project: Project,
+) -> dict[str, dict[str, _Donator]]:
+    """Callee qualname -> params bound to a donating callable (one hop).
+
+    A caller passing ``g = jax.jit(f, donate_argnums=...)`` — or the
+    inline ``jax.jit(...)`` expression itself — for a parameter makes
+    that parameter a donating callable inside the callee. Any mappable
+    call site suffices: donation is a may-consume property, so a single
+    donating caller is enough to flag the callee's reads.
+    """
+    module_dons = {
+        name: _collect_donators(mod.tree.body, mod)
+        for name, mod in project.modules.items()
+    }
+    out: dict[str, dict[str, _Donator]] = {}
+    for qual in sorted(project.functions):
+        info = project.functions[qual]
+        mod = project.modules.get(info.module)
+        if mod is None:
+            continue
+        local = dict(module_dons.get(info.module, {}))
+        body = getattr(info.node, "body", None)
+        if isinstance(body, list):
+            local.update(_collect_donators(body, mod))
+        for callee, call in info.call_sites:
+            target = project.functions.get(callee)
+            if target is None or callee == qual:
+                continue
+            bound = _bind_call(call, target.node)
+            if bound is None:
+                continue
+            for param, expr in bound[0].items():
+                don: _Donator | None = None
+                if isinstance(expr, ast.Name):
+                    don = local.get(expr.id)
+                if don is None:
+                    don = _donator_from(expr, mod)
+                if don is not None:
+                    out.setdefault(callee, {})[param] = don
+    return out
 
 
 def _walk_no_nested(node: ast.AST) -> Iterator[ast.AST]:

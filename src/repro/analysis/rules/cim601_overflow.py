@@ -1,0 +1,44 @@
+"""CIM601 — f32-exactness overflow in the integer MAC pipeline.
+
+Every packed, merged or accumulated integer quantity in the kernels is
+ultimately carried in an f32 accumulator, which is exact only below
+``2**24``. The runtime guards (``gpq_matmul`` and friends raise when a
+worst-case partial sum could cross the mantissa) cover the quantities
+someone remembered to guard; this rule makes the property *provable*:
+each ``# bound:`` contract that mentions the f32 mantissa limit (or is
+explicitly tagged ``# bound(CIM601):``) is evaluated by the range
+engine at every geometry the binder enumerates from ``core.variants`` ×
+the committed ``configs/sweeps/*.json`` grids. A bound whose derived
+maximum can reach the limit at any registered geometry is a finding —
+the overflow would be *silent* (wrong low-order bits, not an error),
+which is exactly the failure mode PR 8's spread-slot packing flirted
+with at the paper point (240 x 65793 = 15,790,320 of the 16,777,216
+budget).
+
+Proof obligations live next to the code as ``# bound:`` comments (see
+:mod:`repro.analysis.contracts`); proved bounds are recorded per
+geometry in ``results/analysis/range-certificate.json``.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Project
+from repro.analysis.ranges import analyze_ranges
+
+
+class Rule:
+    id = "CIM601"
+    summary = (
+        "packed/merged/accumulated integer range can reach 2**24 at a "
+        "registered geometry (f32 exactness silently lost)"
+    )
+
+    def __init__(self) -> None:
+        self.root: Path | None = None
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        yield from analyze_ranges(project, self.root).findings(self.id)

@@ -1,0 +1,44 @@
+"""CIM602 — silent saturation / unproved range bound.
+
+The non-mantissa half of the range-certification contract:
+
+* a ``# bound:`` comparison (not tagged/classified CIM601) whose
+  derived maximum exceeds its limit at a registered geometry — e.g. an
+  ADC reference level that can pass the array's physical range, where
+  the runtime clips instead of raising (PR 2's infeasible-pattern bug
+  class, made statically checkable);
+* a ``# bound:`` the engine cannot evaluate at all — an operand with no
+  derivable finite range, or a malformed contract. An unproved proof
+  obligation is a finding, never a silent pass: stale contracts rot
+  into false confidence otherwise;
+* an f32-accumulating contraction (``preferred_element_type=float32``)
+  inside a contract-carrying module whose enclosing function has *no*
+  bound contract — accumulation without a proof obligation is how the
+  CIM601 class escapes certification.
+
+Bounds are evaluated per geometry by :mod:`repro.analysis.ranges`; the
+proved set is written to ``results/analysis/range-certificate.json``.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Project
+from repro.analysis.ranges import analyze_ranges
+
+
+class Rule:
+    id = "CIM602"
+    summary = (
+        "range bound violated/unprovable at a registered geometry, or "
+        "f32 accumulation without a bound contract (silent saturation)"
+    )
+
+    def __init__(self) -> None:
+        self.root: Path | None = None
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        yield from analyze_ranges(project, self.root).findings(self.id)

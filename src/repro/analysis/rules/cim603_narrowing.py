@@ -1,0 +1,42 @@
+"""CIM603 — dtype narrowing the derived value range does not fit.
+
+``x.astype(jnp.int8)`` (and ``bitslice_weights(..., dtype=...)``) wrap
+silently in jax — there is no overflow error, the high bits just
+vanish. In contract-carrying modules the range engine derives an
+interval for the operand of every literal narrowing cast; when that
+interval escapes the target dtype's representable range at any
+registered geometry, the cast is a finding. Casts whose operand range
+provably fits are recorded as proofs in the certificate; casts whose
+operand the interpreter cannot bound are listed as ``underived`` in the
+certificate but stay silent (flagging every un-derivable cast would
+drown the signal — ``# range:`` seeds exist to make the important ones
+derivable).
+
+The motivating sites: ``bitslice_weights`` emitting ``int8`` planes
+(values provably 0/1), and the int32 casts after ``jnp.clip`` in
+``quantize_acts``/``adc_transfer_int`` (provably within the code
+range at every geometry).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.loader import Project
+from repro.analysis.ranges import analyze_ranges
+
+
+class Rule:
+    id = "CIM603"
+    summary = (
+        "integer cast narrows to a dtype the derived value range "
+        "does not fit (silent wraparound)"
+    )
+
+    def __init__(self) -> None:
+        self.root: Path | None = None
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        yield from analyze_ranges(project, self.root).findings(self.id)

@@ -265,7 +265,7 @@ def restore(
     names = _leaf_names(target)
     leaves, treedef = jax.tree.flatten(target)
     out = []
-    for name, leaf in zip(names, leaves):
+    for name, leaf in zip(names, leaves, strict=True):
         if name not in by_name:
             raise KeyError(f"checkpoint missing tensor '{name}'")
         arr = by_name[name]

@@ -62,6 +62,9 @@ def reference_patterns(cfg: CIMConfig) -> list[list[int]]:
     infeasible for in-SRAM references, which the calibration sweep
     treats as ineligible.
     """
+    # The top reference level must be programmable in-array (PR 2's
+    # infeasible-pattern bug class, proved per operating point).
+    # bound: (adc_codes - 1) * adc_step <= rows_per_group * act_max
     step = reference_input_code(cfg)
     rows = cfg.rows_per_group
     patterns: list[list[int]] = []

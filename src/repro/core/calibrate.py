@@ -425,7 +425,7 @@ def calibrate(
         skipped: list[str] = []
         order = 0
 
-        def skip(vname, bits, rows, cut, reason):
+        def skip(vname, bits, rows, cut, reason, *, name=name):
             msg = (f"variant={vname} adc_bits={bits} rows={rows} "
                    f"cutoff={cut:g}: {reason}")
             logger.info(

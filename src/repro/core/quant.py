@@ -191,6 +191,8 @@ def slot_spec(
     3 planes share a slot — 12 bytes of weight traffic per 8 planes
     instead of the 32 an unpacked f32 plane tensor moves.
     """
+    # Every per-plane group pMAC must fit its packed field exactly.
+    # bound(CIM601): pmac_max < stride
     pmac_max = rows * ((1 << act_bits) - 1)
     field_bits = max(1, pmac_max.bit_length())
     per_slot = _F32_EXACT_BITS // field_bits
@@ -215,6 +217,9 @@ def spread_slots(
     packs to 0, contributing nothing). Slot s occupies columns
     [s*N, (s+1)*N) of the last axis.
     """
+    # Worst-case packed partial sum: every plane saturated, every act at
+    # act_max — the geometric series of per_slot fields at the stride.
+    # bound(CIM601): pmac_max * (stride**per_slot - 1) // (stride - 1) < 2**24
     spec = slot_spec(rows, act_bits, weight_bits)
     if spec is None:
         raise ValueError(

@@ -11,6 +11,7 @@ Prefetch runs a background thread keeping `depth` batches ready.
 
 from __future__ import annotations
 
+import contextlib
 import queue
 import threading
 from typing import Callable, Iterator
@@ -74,9 +75,7 @@ class ShardedLoader:
     def close(self):
         self._stop.set()
         # Drain so the worker unblocks.
-        try:
+        with contextlib.suppress(queue.Empty):
             while True:
                 self._q.get_nowait()
-        except queue.Empty:
-            pass
         self._thread.join(timeout=2.0)

@@ -97,7 +97,7 @@ class SyntheticCIFAR:
             sh = rng.integers(-2, 3, size=(batch, 2))
             imgs = np.stack(
                 [np.roll(im, tuple(s), axis=(0, 1))
-                 for im, s in zip(imgs, sh)]
+                 for im, s in zip(imgs, sh, strict=True)]
             )
         return {"image": imgs.astype(np.float32),
                 "label": labels.astype(np.int32)}

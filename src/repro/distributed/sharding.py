@@ -64,7 +64,7 @@ def spec_for(
     rules = DEFAULT_RULES if rules is None else rules
     used: set[str] = set()
     entries: list[Any] = []
-    for dim, ax in zip(shape, axes):
+    for dim, ax in zip(shape, axes, strict=False):
         if ax is None or ax not in rules:
             entries.append(None)
             continue
@@ -368,7 +368,7 @@ def constrain(x, axes: tuple[str | None, ...]):
     if mesh is None:
         return x
     entries = []
-    for dim, ax in zip(x.shape, axes):
+    for dim, ax in zip(x.shape, axes, strict=False):
         names = []
         factor = 1
         if ax is not None:

@@ -69,6 +69,9 @@ def _grouped_plane_pmac(x, w, rows: int, weight_bits: int):
     (exact integers) plus (bm, bn, gk, b). Widening to f32/i32 happens
     here, on the VMEM-resident tile, not on the HBM operands.
     """
+    # One 0/1-plane group contraction is a pMAC: exact in f32 as long
+    # as the worst group partial sum clears the mantissa with room.
+    # bound(CIM601): pmac_max < 2**24
     bm, bk = x.shape
     bn = w.shape[1]
     gk = bk // rows
@@ -299,7 +302,9 @@ def gpq_matmul(
     assert k == k2, (x_codes.shape, w_codes.shape)
     rows = cfg.rows_active
     _check_blocking(bk, rows)
-    # f32 exact-integer accumulation bound (see module docstring).
+    # f32 exact-integer accumulation bound (see module docstring). The
+    # static mirror proves it over every registered contraction depth:
+    # bound(CIM601): G * 2**(weight_bits - 1) * threshold < 2**23 * adc_step
     max_abs = (k + rows - 1) // rows * (1 << (cfg.weight_bits - 1)) * cfg.threshold
     if max_abs >= (1 << 24) * 0.5 * cfg.adc_step:
         raise ValueError(
@@ -353,6 +358,7 @@ def adder_tree_gpq_matmul(
     mq = merged_quant(cfg)
     # f32 exactness: group codes are integers in [code_min, code_max];
     # the accumulated code sum must stay exactly representable.
+    # bound(CIM601): G * max(-code_min, code_max) < 2**24
     g = (k + rows - 1) // rows
     if g * max(abs(mq.code_min), mq.code_max) >= (1 << 24):
         raise ValueError(
@@ -401,6 +407,9 @@ def cell_adc_gpq_matmul(
     assert k == w_codes.shape[0], (x_codes.shape, w_codes.shape)
     rows = cfg.rows_active
     _check_blocking(bk, rows)
+    # Same accumulation budget as gpq_matmul (the SAR codes are the
+    # same integers the floor transfer produces).
+    # bound(CIM601): G * 2**(weight_bits - 1) * threshold < 2**23 * adc_step
     max_abs = (k + rows - 1) // rows * (1 << (cfg.weight_bits - 1)) * cfg.threshold
     if max_abs >= (1 << 24) * 0.5 * cfg.adc_step:
         raise ValueError(

@@ -121,6 +121,9 @@ def adder_tree_matmul_ref(
 
 def _slot_dot(x_codes, slots, spec):
     """[M, K] codes x [G, rows, S*N] slots -> combined [G, M, S*N] f32."""
+    # The combined dot is exact iff the fully-saturated packed partial
+    # sum stays inside the f32 mantissa (same series as spread_slots).
+    # bound(CIM601): pmac_max * (stride**per_slot - 1) // (stride - 1) < 2**24
     m, k = x_codes.shape
     g, rows, sn = slots.shape
     if rows != spec.rows_active:
@@ -194,6 +197,9 @@ def cim_matmul_slots(
     adc modes; noiseless by definition. Also serves the cell-adc
     variant, whose noise-free SAR codes equal this transfer exactly.
     """
+    # f32 group accumulation of dequantized plane codes stays exact up
+    # to the contraction depths registered for this geometry.
+    # bound(CIM601): G * 2**(weight_bits - 1) * threshold < 2**23 * adc_step
     ss, n = _slot_geometry(slots, cfg)
     g = slots.shape[0]
     m = x_codes.shape[0]
@@ -225,6 +231,9 @@ def adder_tree_matmul_slots(
     """
     from repro.core.variants import merged_quant  # noqa: PLC0415 - no cycle
 
+    # Merged codes are summed over G groups in f32; the worst merged
+    # code magnitude times depth must stay below the mantissa.
+    # bound(CIM601): G * max(-code_min, code_max) < 2**24
     ss, n = _slot_geometry(slots, cfg)
     g = slots.shape[0]
     m = x_codes.shape[0]

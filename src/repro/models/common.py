@@ -70,7 +70,7 @@ def init_params(key: jax.Array, spec_tree: Any) -> Params:
         spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
     )
     keys = jax.random.split(key, len(leaves))
-    arrs = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    arrs = [_init_one(k, s) for k, s in zip(keys, leaves, strict=True)]
     return jax.tree.unflatten(treedef, arrs)
 
 

@@ -112,7 +112,8 @@ def apply_updates(
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
     out = [upd(p, g, m, v)
-           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v,
+                                 strict=True)]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
@@ -158,7 +159,7 @@ def compress_decompress(
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_r = treedef.flatten_up_to(comp.residual)
-    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    out = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
     new_g = treedef.unflatten([o[0] for o in out])
     new_r = treedef.unflatten([o[1] for o in out])
     err = sum(jnp.sum(jnp.square(r)) for r in [o[1] for o in out])

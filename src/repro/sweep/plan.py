@@ -70,7 +70,7 @@ def expand(config: SweepConfig) -> list[GridPoint]:
     for i, combo in enumerate(
         itertools.product(*(config.axes[n] for n in names))
     ):
-        values = dict(zip(names, combo))
+        values = dict(zip(names, combo, strict=True))
         points.append(
             GridPoint(index=i, point_id=point_id(h, values), values=values)
         )

@@ -148,6 +148,90 @@ def test_cim101_config_annotation_exempt_and_item_flagged(tmp_path):
     assert ".item()" in report.findings[0].message
 
 
+def test_cim101_static_flows_through_unannotated_helper(tmp_path):
+    # Interprocedural leg: `helper` carries no annotation, but its only
+    # caller passes a static-by-annotation config record — float() over
+    # its attributes is compile-time work, not a tracer readback.
+    root = _tree(tmp_path, {"mod.py": """
+        import jax
+
+        def helper(x, cfg):
+            return x * float(cfg.adc_step)
+
+        def kernel(x, cfg: "CIMConfig"):
+            return helper(x, cfg)
+
+        def run(x, cfg):
+            return jax.jit(kernel)(x, cfg)
+    """})
+    assert _rules_of(_run(root)) == []
+
+
+def test_cim101_cross_call_traced_value_still_flags(tmp_path):
+    # Same helper shape, but the caller passes the traced operand:
+    # cross-call flow must not launder tracers into statics.
+    root = _tree(tmp_path, {"mod.py": """
+        import jax
+
+        def helper(v):
+            return float(v)
+
+        def kernel(x, cfg: "CIMConfig"):
+            return helper(x)
+
+        def run(x, cfg):
+            return jax.jit(kernel)(x, cfg)
+    """})
+    report = _run(root)
+    assert _rules_of(report) == ["CIM101"]
+    assert report.findings[0].symbol.endswith("helper")
+
+
+def test_cim101_cross_call_mixed_sites_stay_traced(tmp_path):
+    # One static caller + one traced caller: the parameter is static
+    # only if EVERY mappable site passes a static — it is not here.
+    root = _tree(tmp_path, {"mod.py": """
+        import jax
+
+        def helper(v):
+            return float(v)
+
+        def kernel(x, cfg: "CIMConfig"):
+            helper(cfg.adc_step)
+            return helper(x)
+
+        def run(x, cfg):
+            return jax.jit(kernel)(x, cfg)
+    """})
+    assert _rules_of(_run(root)) == ["CIM101"]
+
+
+def test_cim101_plane_signs_readback_regression(tmp_path):
+    # The PR 8 near-miss in miniature: a jitted consumer indexing a
+    # materialized sign plane back to a Python float. The helper has no
+    # annotation; reachability plus cross-call flow must still flag it.
+    root = _tree(tmp_path, {"mod.py": """
+        import jax
+        import jax.numpy as jnp
+
+        def plane_signs(b):
+            return jnp.ones((b,))
+
+        def fold(acc, b):
+            return acc * float(plane_signs(8)[b])
+
+        def transfer(x):
+            def body(acc, xs):
+                return fold(acc, 0) + xs, None
+            acc, _ = jax.lax.scan(body, x, x)
+            return acc
+    """})
+    report = _run(root)
+    assert _rules_of(report) == ["CIM101"]
+    f = report.findings[0]
+    assert "float()" in f.message and f.symbol.endswith("fold")
+
+
 def test_cim101_vmap_and_np_asarray(tmp_path):
     root = _tree(tmp_path, {"mod.py": """
         import jax
@@ -326,6 +410,49 @@ def test_cim301_reverse_drift(tmp_path):
     assert "'ghost'" in msgs and "'phantom'" in msgs
 
 
+def test_cim301_docstring_mention_is_not_test_coverage(tmp_path):
+    # The test-reference leg is an AST walk over string literals now: a
+    # variant name appearing only in a test docstring is documentation,
+    # not coverage, and must still flag.
+    root = _tree(tmp_path, {
+        "variants.py": _VARIANTS_FIXTURE,
+        "dispatch.py": _DISPATCH_FIXTURE + (
+            '    register_kernel(KernelKey("exotic", "scan"))\n'
+        ),
+        "energy.py": 'VARIANT_ANCHORS = {"p8t": 1, "exotic": 2}\n',
+    })
+    tests = tmp_path / "t"
+    tests.mkdir()
+    (tests / "test_variants.py").write_text(
+        '"""Covers p8t and exotic."""\n\n'
+        "def test_one():\n"
+        '    """Checks the exotic variant."""\n'
+        "    assert 'p8t'\n"
+    )
+    report = _run(root, tests_dir=tests)
+    assert _rules_of(report) == ["CIM301"]
+    (f,) = report.findings
+    assert "'exotic'" in f.message and "test" in f.message
+
+
+def test_cim301_fstring_literal_counts_as_coverage(tmp_path):
+    root = _tree(tmp_path, {
+        "variants.py": _VARIANTS_FIXTURE,
+        "dispatch.py": _DISPATCH_FIXTURE + (
+            '    register_kernel(KernelKey("exotic", "scan"))\n'
+        ),
+        "energy.py": 'VARIANT_ANCHORS = {"p8t": 1, "exotic": 2}\n',
+    })
+    tests = tmp_path / "t"
+    tests.mkdir()
+    (tests / "test_variants.py").write_text(
+        "def test_all(backend):\n"
+        "    assert 'p8t'\n"
+        "    key = f'exotic/{backend}'\n"
+    )
+    assert _rules_of(_run(root, tests_dir=tests)) == []
+
+
 def test_cim301_silent_without_variants(tmp_path):
     root = _tree(tmp_path, {"mod.py": "x = 1\n"})
     assert _rules_of(_run(root)) == []
@@ -420,6 +547,77 @@ def test_cim501_rebind_idiom_clean(tmp_path):
             step = jax.jit(update, donate_argnums=(0,))
             state = step(state, batches)
             return state
+    """})
+    assert _rules_of(_run(root)) == []
+
+
+def test_cim501_loop_back_edge_flagged(tmp_path):
+    # The consume is on iteration N, the fatal read on iteration N+1 —
+    # invisible to a single linear pass, caught by the body replay.
+    root = _tree(tmp_path, {"train.py": """
+        import jax
+
+        step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+
+        def loop(state, batches):
+            for b in batches:
+                out = step(state, b)
+            return out
+    """})
+    report = _run(root)
+    assert _rules_of(report) == ["CIM501"]
+    assert "'state'" in report.findings[0].message
+
+
+def test_cim501_loop_rebind_idiom_clean(tmp_path):
+    # state = step(state, b) re-binds before the back-edge: clean. The
+    # module-level donator must be visible inside the function.
+    root = _tree(tmp_path, {"train.py": """
+        import jax
+
+        step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+
+        def loop(state, batches):
+            for b in batches:
+                state = step(state, b)
+            return state
+    """})
+    assert _rules_of(_run(root)) == []
+
+
+def test_cim501_donating_callable_across_one_hop(tmp_path):
+    # `run` never mentions jax.jit; it receives the donating callable
+    # as a parameter from its caller and must still see the consume.
+    root = _tree(tmp_path, {"train.py": """
+        import jax
+
+        step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+
+        def run(step_fn, state, batch):
+            step_fn(state, batch)
+            return state
+
+        def main(state, batch):
+            return run(step, state, batch)
+    """})
+    report = _run(root)
+    assert _rules_of(report) == ["CIM501"]
+    f = report.findings[0]
+    assert f.symbol.endswith("run") and "'state'" in f.message
+
+
+def test_cim501_one_hop_rebind_clean(tmp_path):
+    root = _tree(tmp_path, {"train.py": """
+        import jax
+
+        step = jax.jit(lambda s, b: s + b, donate_argnums=(0,))
+
+        def run(step_fn, state, batch):
+            state = step_fn(state, batch)
+            return state
+
+        def main(state, batch):
+            return run(step, state, batch)
     """})
     assert _rules_of(_run(root)) == []
 
@@ -539,9 +737,10 @@ def test_cli_exit_codes(tmp_path, capsys):
         assert rid in listed
 
 
-def test_rule_ids_are_the_documented_five():
+def test_rule_ids_are_the_documented_eight():
     assert RULE_IDS == (
         "CIM101", "CIM201", "CIM301", "CIM401", "CIM501",
+        "CIM601", "CIM602", "CIM603",
     )
 
 

@@ -46,7 +46,8 @@ def _tiny_setup(tmp_path, ckpt_every=2):
 def _tree_equal(a, b):
     return all(
         np.array_equal(np.asarray(x), np.asarray(y))
-        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b),
+                        strict=True)
     )
 
 

@@ -43,7 +43,7 @@ class TestPipelineBitExact:
             x, w = rand_xw()
             got = macro.macro_op(x, w, cfg)
             want = macro._macro_op_oracle(x, w, cfg)
-            for g, o in zip(got, want):
+            for g, o in zip(got, want, strict=True):
                 np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
 
     def test_noisy_equals_oracle_same_key(self):
@@ -53,7 +53,7 @@ class TestPipelineBitExact:
             key = jax.random.PRNGKey(i)
             got = macro.macro_op(x, w, cfg, key=key)
             want = macro._macro_op_oracle(x, w, cfg, key=key)
-            for g, o in zip(got, want):
+            for g, o in zip(got, want, strict=True):
                 np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
 
     def test_macrospec_input_equals_config_input(self):

@@ -1,0 +1,324 @@
+"""repro.analysis.ranges — the CIM6xx range certifier.
+
+Three layers under test:
+
+* the interval domain (pure arithmetic, no I/O);
+* the geometry binder — including the tier-1 cross-validation of every
+  pure-Python mirror against the jax-importing originals over the full
+  enumerated grid (the mirrors are hand-maintained; this test is what
+  makes drift a failure instead of silent mis-certification);
+* the certifier end to end: seeded CIM601/602/603 fixtures must flag,
+  the committed ``results/analysis/range-certificate.json`` must match
+  a fresh regeneration byte for byte, and regeneration itself must be
+  deterministic.
+"""
+
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze
+from repro.analysis.loader import Project
+from repro.analysis.ranges import (
+    TOP,
+    Interval,
+    certificate_payload,
+    enumerate_geometries,
+    render_certificate,
+)
+from repro.analysis.ranges import interval as iv
+from repro.analysis.ranges.geometry import (
+    GeometryInfeasible,
+    mirror_config,
+)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+CERT_PATH = REPO_ROOT / "results" / "analysis" / "range-certificate.json"
+
+
+def _tree(tmp_path: Path, files: dict[str, str]) -> Path:
+    root = tmp_path / "proj"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return root
+
+
+def _run(root: Path):
+    report, _ = analyze([root], baseline_path=None, root=root)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Interval domain
+# ---------------------------------------------------------------------------
+
+
+def test_interval_arithmetic():
+    a = iv.const(3)
+    b = Interval(-2, 5)
+    assert iv.add(a, b) == Interval(1, 8)
+    assert iv.sub(b, a) == Interval(-5, 2)
+    assert iv.neg(b) == Interval(-5, 2)
+    assert iv.mul(Interval(-2, 3), Interval(4, 5)) == Interval(-10, 15)
+    assert iv.join(a, b) == Interval(-2, 5)
+    assert iv.abs_(b) == Interval(0, 5)
+    assert iv.max_(b, iv.const(0)) == Interval(0, 5)
+    assert iv.min_(b, iv.const(0)) == Interval(-2, 0)
+
+
+def test_interval_top_and_infinities():
+    assert TOP.is_top and not TOP.bounded
+    assert iv.add(TOP, iv.const(1)).is_top
+    # inf * 0 must stay 0 (a zero operand annihilates even TOP scale).
+    assert iv.mul(TOP, iv.const(0)) == Interval(0, 0)
+    # A divisor interval spanning zero gives no information.
+    assert iv.div(iv.const(8), Interval(-1, 1)).is_top
+    assert iv.div(iv.const(9), iv.const(2), floor=True) == Interval(4, 4)
+
+
+def test_interval_clamp_mod_pow():
+    assert iv.clamp(
+        Interval(-10, 300), iv.const(0), iv.const(255)
+    ) == Interval(0, 255)
+    assert iv.mod(Interval(0, 100), iv.const(8)) == Interval(0, 7)
+    assert iv.pow_(iv.const(2), iv.const(10)) == Interval(1024, 1024)
+
+
+# ---------------------------------------------------------------------------
+# Geometry binder + mirror cross-validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def real_geometries():
+    project = Project.load([REPO_ROOT / "src" / "repro"])
+    return enumerate_geometries(project, REPO_ROOT)
+
+
+def test_enumeration_covers_paper_point_per_variant(real_geometries):
+    points, excluded = real_geometries
+    assert excluded == []
+    variants = {p.variant for p in points}
+    assert variants == {"p8t", "adder-tree", "cell-adc"}
+    for v in sorted(variants):
+        paper = [
+            p for p in points
+            if p.variant == v and p.rows_active == 16 and p.act_bits == 4
+            and p.adc_bits == 4
+        ]
+        assert len(paper) == 1, f"paper point missing for {v}"
+        (p,) = paper
+        syms = p.symbols(k=1024)
+        # The headline packing: pMAC <= 240, stride 256, 3 planes/slot.
+        assert syms["pmac_max"] == 240
+        assert syms["stride"] == 256 and syms["per_slot"] == 3
+        assert syms["adc_step"] == 8 and syms["threshold"] == 128
+        assert 1024 in p.k_values  # the paper decode depth is always on
+        assert syms["G"] == 64
+
+
+def test_enumeration_spans_committed_sweep_axes(real_geometries):
+    points, _ = real_geometries
+    # The committed sweeps drive rows_active and adc_bits axes; every
+    # grid value must be certified, not just the paper point.
+    assert {p.rows_active for p in points} >= {4, 8, 16}
+    assert {p.adc_bits for p in points} >= {3, 4, 5}
+
+
+def test_mirrors_match_jax_originals_over_full_grid(real_geometries):
+    from repro.core.params import CIMConfig
+    from repro.core.quant import slot_spec
+    from repro.core.variants import merged_quant
+
+    points, _ = real_geometries
+    assert points, "empty enumeration would vacuously pass"
+    for p in points:
+        cfg = CIMConfig(
+            rows_per_group=p.rows_per_group,
+            rows_active=p.rows_active,
+            act_bits=p.act_bits,
+            weight_bits=p.weight_bits,
+            adc_bits=p.adc_bits,
+            cutoff=p.cutoff,
+            adc_coarse_bits=p.coarse_bits,
+        )
+        syms = p.symbols()
+        assert syms["pmac_max"] == cfg.pmac_max
+        assert syms["q_full"] == cfg.q_full
+        assert syms["threshold"] == cfg.threshold
+        assert syms["adc_step"] == cfg.adc_step
+        assert syms["adc_codes"] == cfg.adc_codes
+        assert syms["act_max"] == cfg.act_max
+
+        spec = slot_spec(p.rows_active, p.act_bits, p.weight_bits)
+        if spec is None:
+            assert "stride" not in syms
+        else:
+            assert (syms["stride"], syms["per_slot"], syms["n_slots"]) \
+                == tuple(spec)
+
+        mq = merged_quant(cfg)
+        assert syms["m_min"] == mq.m_min
+        assert syms["m_max"] == mq.m_max
+        assert syms["merged_levels"] == mq.levels
+        assert syms["bits_eff"] == mq.bits_eff
+        assert syms["merged_step"] == mq.step
+        assert syms["code_min"] == mq.code_min
+        assert syms["code_max"] == mq.code_max
+
+
+def test_mirror_raises_where_the_real_code_raises():
+    # rows_active > rows_per_group raises in CIMConfig.__post_init__.
+    with pytest.raises(GeometryInfeasible):
+        mirror_config(
+            rows_per_group=16, rows_active=32, act_bits=4, weight_bits=8,
+            adc_bits=4, cutoff=0.5, coarse_bits=1,
+        )
+    # adc_bits beyond q_full raises too.
+    with pytest.raises(GeometryInfeasible):
+        mirror_config(
+            rows_per_group=16, rows_active=16, act_bits=4, weight_bits=8,
+            adc_bits=12, cutoff=0.5, coarse_bits=1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Seeded overflow / saturation / narrowing fixtures
+# ---------------------------------------------------------------------------
+
+# The seeded bug: a packing whose stride is one bit too wide. At the
+# 16-row paper geometry the worst packed partial sum becomes
+# 240 * (512**3 - 1) // 511 = 63,037,680 >= 2**24 — inexact in f32.
+_OVERFLOW_FIXTURE = """
+    def spread(codes, rows, act_bits):
+        # bound(CIM601): pmac_max * ((2*stride)**per_slot - 1) // (2*stride - 1) < 2**24
+        return codes * rows * act_bits
+"""
+
+
+def test_cim601_seeded_stride_overflow_flagged(tmp_path):
+    root = _tree(tmp_path, {"pack.py": _OVERFLOW_FIXTURE})
+    report = _run(root)
+    assert [f.rule for f in report.findings] == ["CIM601"]
+    (f,) = report.findings
+    assert "2**24" in f.message or "f32" in f.message
+
+
+def test_cim601_correct_stride_bound_proves(tmp_path):
+    good = _OVERFLOW_FIXTURE.replace("2*stride", "stride")
+    root = _tree(tmp_path, {"pack.py": good})
+    report = _run(root)
+    assert report.findings == []
+    bound_sites = [
+        s for s in report.certificate["sites"] if s["kind"] == "bound"
+    ]
+    assert bound_sites and all(
+        s["status"] == "proved" for s in bound_sites
+    )
+
+
+def test_cim602_unprovable_bound_flagged(tmp_path):
+    root = _tree(tmp_path, {"mod.py": """
+        def f(x):
+            # bound: fudge < 2**10
+            return x
+    """})
+    report = _run(root)
+    assert [f.rule for f in report.findings] == ["CIM602"]
+    assert "fudge" in report.findings[0].message
+
+
+def test_cim602_malformed_contract_flagged(tmp_path):
+    root = _tree(tmp_path, {"mod.py": """
+        def f(x):
+            # bound: pmac_max < stride < 2**24
+            return x
+    """})
+    report = _run(root)
+    assert [f.rule for f in report.findings] == ["CIM602"]
+
+
+def test_cim603_narrowing_astype_flagged_and_proved(tmp_path):
+    root = _tree(tmp_path, {"mod.py": """
+        import jax.numpy as jnp
+
+        def bad(x):
+            # range: x in [0, 255]
+            return x.astype(jnp.int8)
+
+        def good(x):
+            # range: x in [0, 255]
+            return x.astype(jnp.int32)
+    """})
+    report = _run(root)
+    assert [f.rule for f in report.findings] == ["CIM603"]
+    (f,) = report.findings
+    assert "int8" in f.message and f.symbol.endswith("bad")
+
+
+# ---------------------------------------------------------------------------
+# The certificate document
+# ---------------------------------------------------------------------------
+
+
+def test_committed_certificate_is_fresh():
+    # Same gate check.sh and the range-certifier CI job apply: the
+    # committed document must equal a from-scratch regeneration.
+    assert CERT_PATH.exists(), "committed range certificate missing"
+    project = Project.load([REPO_ROOT / "src" / "repro"])
+    fresh = render_certificate(certificate_payload(project, REPO_ROOT))
+    assert fresh == CERT_PATH.read_text(), (
+        "range certificate drifted — regenerate with "
+        "'PYTHONPATH=src python -m repro.analysis src/repro --strict' "
+        "and commit the result"
+    )
+
+
+def test_committed_certificate_proves_everything():
+    import json
+
+    payload = json.loads(CERT_PATH.read_text())
+    counts = payload["counts"]
+    assert counts["violated"] == 0 and counts["unproved"] == 0
+    assert counts["proved"] > 0
+    assert counts["geometries"] >= 27
+    # Every geometry id referenced by a proof exists in the header.
+    gids = set(payload["geometries"])
+    for site in payload["sites"]:
+        for proof in site["proofs"]:
+            assert proof["geometry"] in gids
+
+
+def test_certificate_regeneration_is_deterministic(tmp_path):
+    files = {"pack.py": _OVERFLOW_FIXTURE.replace("2*stride", "stride")}
+    a = _tree(tmp_path / "a", files)
+    b = _tree(tmp_path / "b", files)
+    ra = _run(a)
+    rb = _run(b)
+    assert render_certificate(ra.certificate) == render_certificate(
+        rb.certificate
+    )
+
+
+def test_cli_writes_certificate(tmp_path):
+    from repro.analysis.cli import main as cli_main
+
+    root = _tree(tmp_path, {
+        "pack.py": _OVERFLOW_FIXTURE.replace("2*stride", "stride"),
+    })
+    target = tmp_path / "cert.json"
+    code = cli_main([
+        str(root), "--no-baseline", "--certificate", str(target),
+    ])
+    assert code == 0
+    assert target.exists()
+    import json
+
+    payload = json.loads(target.read_text())
+    assert payload["schema"] == 1
+    assert payload["counts"]["violated"] == 0

@@ -34,10 +34,12 @@ class TestResNet:
         _, bn_eval = resnet.forward(params, bn, x, cfg, train=False)
         d_train = sum(
             float(jnp.sum(jnp.abs(a - b)))
-            for a, b in zip(jax.tree.leaves(bn), jax.tree.leaves(bn_train)))
+            for a, b in zip(jax.tree.leaves(bn), jax.tree.leaves(bn_train),
+                            strict=True))
         d_eval = sum(
             float(jnp.sum(jnp.abs(a - b)))
-            for a, b in zip(jax.tree.leaves(bn), jax.tree.leaves(bn_eval)))
+            for a, b in zip(jax.tree.leaves(bn), jax.tree.leaves(bn_eval),
+                            strict=True))
         assert d_train > 0
         assert d_eval == 0
 
@@ -117,7 +119,7 @@ class TestEnergyModel:
 
     def test_energy_monotone_in_vdd(self):
         es = [energy.energy_per_cycle_j(v) for v in (0.6, 0.8, 1.0, 1.2)]
-        assert all(a < b for a, b in zip(es, es[1:]))
+        assert all(a < b for a, b in zip(es, es[1:], strict=False))
 
     def test_sub_vt_vdd_raises_clearly(self):
         """Both fitted-curve entry points reject supplies at/below the

@@ -89,7 +89,7 @@ class TestArchDivisibility:
         def one(ax, sp):
             p = shd.spec_for(ax, sp.shape, mesh)
             # every named entry must divide
-            for dim, entry in zip(sp.shape, p):
+            for dim, entry in zip(sp.shape, p, strict=False):
                 if entry is None:
                     continue
                 names = entry if isinstance(entry, tuple) else (entry,)
